@@ -1,0 +1,99 @@
+"""Shared benchmark substrate: one small LM trained once on the synthetic
+corpus (cached on disk), held-out perplexity, timing helpers, CSV output.
+
+Quality numbers are IN-KIND reproductions of the paper's tables: the paper
+measures WikiText2 PPL on pretrained LLaMA; offline we measure held-out PPL
+of a from-scratch tiny LM on the deterministic synthetic corpus. Relative
+orderings (FP < W4 < GQSA-W4S50 < W2, 2:4 vs GQSA, stage ablations) are the
+reproduced claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.steps import build_train_step, make_dist
+from repro.models.registry import get_model, lm_loss
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+BENCH_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+BENCH_CFG = ModelConfig(
+    name="bench-tiny-llama", family="dense",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=352, vocab=256,
+    dtype="float32", attn_block_q=64, attn_block_k=64, remat=False)
+
+SEQ = 64
+BATCH = 16
+TRAIN_STEPS = 1500
+
+
+def trained_tiny_model(steps: int = TRAIN_STEPS):
+    """Train (or load cached) the benchmark LM. Returns (cfg, params)."""
+    cfg = BENCH_CFG
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ckpt = CheckpointManager(str(BENCH_DIR / "model"), async_save=False)
+    if ckpt.latest_step() == steps:
+        return cfg, ckpt.restore(params, steps)
+    step = jax.jit(build_train_step(
+        cfg, make_dist(cfg, None), adamw.AdamWConfig(lr=6e-3),
+        lr_fn=warmup_cosine(6e-3, 50, steps)))
+    opt = adamw.init_state(params)
+    data = SyntheticLM(cfg.vocab, SEQ, BATCH, seed=0)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
+        params, opt, m = step(params, opt, batch)
+    print(f"# trained bench model: final loss {float(m['loss']):.4f}")
+    ckpt.save(steps, params)
+    return cfg, params
+
+
+def held_out_batches(cfg, n=8, seed=10_000):
+    data = SyntheticLM(cfg.vocab, SEQ, BATCH, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
+            for i in range(n)]
+
+
+def calib_batches(cfg, n=4, seed=777):
+    data = SyntheticLM(cfg.vocab, SEQ, BATCH, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
+            for i in range(n)]
+
+
+def eval_ppl(params, cfg, batches) -> float:
+    api = get_model(cfg)
+
+    @jax.jit
+    def nll(p, batch):
+        logits, _ = api.forward(p, batch, cfg)
+        return lm_loss(logits, batch["labels"])
+
+    losses = [float(nll(params, b)) for b in batches]
+    return float(np.exp(np.mean(losses)))
+
+
+def time_call(fn, *args, warmup=2, iters=5) -> float:
+    """Median wall-clock microseconds per call (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

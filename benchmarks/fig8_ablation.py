@@ -1,0 +1,30 @@
+"""Paper Figure 8: PPL vs sparsity level (left) and vs group size (right).
+Reproduced claims: robust <=50% sparsity, degrading beyond 60% but no
+collapse at 80%; smaller groups quantize/prune better."""
+from benchmarks.common import (calib_batches, emit, eval_ppl,
+                               held_out_batches, trained_tiny_model)
+from repro.core.gqs_layer import GQSAConfig
+from repro.core.model_compress import compress_params
+from repro.core.pruning import PruneConfig
+from repro.core.quant import QuantConfig
+
+
+def main():
+    cfg, params = trained_tiny_model()
+    ev = held_out_batches(cfg)
+
+    for s in (0.2, 0.4, 0.5, 0.6, 0.8):
+        gq = compress_params(params, cfg, GQSAConfig(
+            prune=PruneConfig(sparsity=s, group_size=16)))
+        emit(f"fig8/sparsity_{int(s*100)}", 0,
+             f"ppl={eval_ppl(gq, cfg, ev):.3f}")
+
+    for g in (8, 16, 32):  # 64 does not divide bench d_ff=352
+        gq = compress_params(params, cfg, GQSAConfig(
+            quant=QuantConfig(bits=4, group_size=g),
+            prune=PruneConfig(sparsity=0.5, group_size=g)))
+        emit(f"fig8/group_{g}", 0, f"ppl={eval_ppl(gq, cfg, ev):.3f}")
+
+
+if __name__ == "__main__":
+    main()

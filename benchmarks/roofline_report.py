@@ -1,0 +1,30 @@
+"""Aggregate the dry-run artifacts into the roofline table (§Roofline)."""
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRY = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def main():
+    if not DRY.is_dir():
+        print("# no dry-run artifacts; run repro.launch.dryrun --all")
+        return
+    for f in sorted(DRY.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            emit(f"roofline/{f.stem}", 0, "status=fail")
+            continue
+        r = rec["roofline"]
+        dom = r["dominant"]
+        dom_s = r[f"{dom}_s"]
+        emit(f"roofline/{f.stem}", dom_s * 1e6,
+             f"dominant={dom};compute_s={r['compute_s']:.3g};"
+             f"memory_s={r['memory_s']:.3g};"
+             f"collective_s={r['collective_s']:.3g};"
+             f"useful={r.get('useful_ratio') or 0:.3f}")
+
+
+if __name__ == "__main__":
+    main()

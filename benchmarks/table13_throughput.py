@@ -1,0 +1,18 @@
+"""Paper Table 13: serving throughput (tokens/s), FP vs W4 vs W4S50,
+via the continuous-batching serve loop."""
+from benchmarks.common import emit
+from repro.launch import serve
+
+
+def main():
+    for comp in ("none", "w4", "gqsa"):
+        res = serve.main(["--arch", "llama2_7b", "--reduced",
+                          "--compress", comp, "--requests", "6",
+                          "--slots", "3", "--max-new", "8",
+                          "--max-seq", "48"])
+        emit(f"table13/{comp}", 1e6 / max(res["tok_per_s"], 1e-9),
+             f"tok_per_s={res['tok_per_s']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 4/16: end-to-end decode latency, FP vs W4 vs GQSA-W4S50,
+across cache lengths. Measured: serve_step wall-clock on CPU (XLA path).
+Derived: modeled TPU per-step weight+cache bytes / HBM bandwidth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call, trained_tiny_model
+from repro.core.gqs_layer import GQSAConfig
+from repro.core.model_compress import compress_params, compress_params_w4
+from repro.core.quant import QuantConfig
+from repro.launch.hlo_analysis import HBM_BW
+from repro.launch.steps import build_serve_step, make_dist
+from repro.models.registry import get_model
+
+
+def _weight_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def main():
+    cfg, params = trained_tiny_model()
+    api = get_model(cfg)
+    dist = make_dist(cfg, None)
+    B = 4
+
+    variants = {
+        "fp32": params,
+        "w4": compress_params_w4(params, cfg, QuantConfig(group_size=16)),
+        "gqsa_w4s50": compress_params(params, cfg, GQSAConfig()),
+    }
+    for seq in (128, 256, 512):
+        for name, p in variants.items():
+            cache = api.init_cache(cfg, B, seq)
+            step = jax.jit(build_serve_step(cfg, dist))
+            tok = jnp.zeros((B, 1), jnp.int32)
+            us = time_call(step, p, cache, tok, jnp.int32(seq - 2))
+            wb = _weight_bytes(p)
+            cb = _weight_bytes(cache)
+            tpu_us = (wb + cb) / HBM_BW * 1e6
+            emit(f"table4/{name}_seq{seq}", us,
+                 f"tpu_us={tpu_us:.1f};weight_bytes={wb};cache_bytes={cb}")
+
+
+if __name__ == "__main__":
+    main()

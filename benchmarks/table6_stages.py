@@ -1,0 +1,29 @@
+"""Paper Table 6 / Appendix B: BQPO vs BQPO+E2E-OQP ablation (plus the
+no-optimization oneshot arm). Reproduced claim: each stage improves PPL."""
+from benchmarks.common import (calib_batches, emit, eval_ppl,
+                               held_out_batches, trained_tiny_model)
+from repro.core.bqpo import BQPOConfig
+from repro.core.e2e_oqp import E2EConfig
+from repro.core.pipeline import gqsa_compress, oneshot, stage1_only
+
+
+def main():
+    cfg, params = trained_tiny_model()
+    ev = held_out_batches(cfg)
+    calib = calib_batches(cfg)
+
+    p0 = oneshot(params, calib, cfg)
+    emit("table6/oneshot_w4s50", 0, f"ppl={eval_ppl(p0, cfg, ev):.3f}")
+
+    p1 = stage1_only(params, calib, cfg, bqpo_cfg=BQPOConfig(steps=40,
+                                                             lr=5e-4))
+    emit("table6/bqpo_w4s50", 0, f"ppl={eval_ppl(p1, cfg, ev):.3f}")
+
+    p2, _ = gqsa_compress(params, calib, cfg,
+                          bqpo_cfg=BQPOConfig(steps=40, lr=5e-4),
+                          e2e_cfg=E2EConfig(steps=60, lr=5e-4))
+    emit("table6/bqpo_e2e_w4s50", 0, f"ppl={eval_ppl(p2, cfg, ev):.3f}")
+
+
+if __name__ == "__main__":
+    main()

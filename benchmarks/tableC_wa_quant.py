@@ -1,0 +1,43 @@
+"""Paper Appendix C: GQSA under weight-activation quantization (W4A8S50).
+Activations are int8-quantized per tensor at GQS layer inputs."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (emit, eval_ppl, held_out_batches,
+                               trained_tiny_model)
+from repro.core import gqs_layer
+from repro.core.gqs_layer import GQSAConfig
+from repro.core.model_compress import compress_params
+from repro.core.quant import int8_symmetric_dequant, int8_symmetric_quant
+
+
+def main():
+    cfg, params = trained_tiny_model()
+    ev = held_out_batches(cfg)
+    packed = compress_params(params, cfg, GQSAConfig())
+
+    emit("tableC/w4a16s50", 0, f"ppl={eval_ppl(packed, cfg, ev):.3f}")
+
+    # monkey-patch the linear entry to fake-quantize activations to int8
+    orig = gqs_layer.apply_linear
+
+    def a8_linear(p, x, **kw):
+        if isinstance(p, dict) and "bsr" in p:
+            q, s = int8_symmetric_quant(x)
+            x = int8_symmetric_dequant(q, s, x.dtype)
+        return orig(p, x, **kw)
+
+    gqs_layer.apply_linear = a8_linear
+    # model modules hold their own reference; patch at call sites
+    import repro.models.layers as L
+    orig_L = L.apply_linear
+    L.apply_linear = a8_linear
+    try:
+        emit("tableC/w4a8s50", 0, f"ppl={eval_ppl(packed, cfg, ev):.3f}")
+    finally:
+        gqs_layer.apply_linear = orig
+        L.apply_linear = orig_L
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig, MoECfg, MLACfg, SSMCfg, SHAPES
+from repro.configs.registry import (get_config, input_specs, list_archs,
+                                    supported_shapes, all_cells, ARCH_IDS)

@@ -1,0 +1,28 @@
+"""mamba2-130m [arXiv:2405.21060]: pure SSD stack, attention-free,
+tied embeddings. Sub-quadratic => runs long_500k."""
+from repro.configs.base import ModelConfig, SSMCfg
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m", family="ssm",
+        n_layers=24, d_model=768, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=50280,
+        ssm=SSMCfg(d_state=128, head_dim=64, expand=2, conv_width=4,
+                   chunk=256),
+        tie_embeddings=True,
+        supports_long_context=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m-reduced", family="ssm",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=256,
+        ssm=SSMCfg(d_state=16, head_dim=16, expand=2, conv_width=4,
+                   chunk=16),
+        tie_embeddings=True,
+        supports_long_context=True,
+        dtype="float32",
+    )

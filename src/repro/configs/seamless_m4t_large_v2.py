@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [arXiv:2308.11596]: enc-dec backbone; the speech
+frontend is a stub (1024 precomputed frame embeddings)."""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="encdec",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=8192, vocab=256206,
+        enc_layers=24, n_frames=1024, mlp_type="gelu",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2-reduced", family="encdec",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        enc_layers=2, n_frames=16, mlp_type="gelu",
+        dtype="float32", attn_block_q=32, attn_block_k=32,
+    )

@@ -1,0 +1,28 @@
+"""zamba2-7b [arXiv:2411.15242]: Mamba2 backbone + shared attention block
+every 6 SSM layers. Sub-quadratic mixer => runs long_500k."""
+from repro.configs.base import ModelConfig, SSMCfg
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab=32000,
+        ssm=SSMCfg(d_state=64, head_dim=64, expand=2, conv_width=4,
+                   chunk=128),
+        shared_attn_every=6,
+        supports_long_context=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-reduced", family="hybrid",
+        n_layers=7, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        ssm=SSMCfg(d_state=16, head_dim=16, expand=2, conv_width=4,
+                   chunk=16),
+        shared_attn_every=3,
+        supports_long_context=True,
+        dtype="float32", attn_block_q=32, attn_block_k=32,
+    )

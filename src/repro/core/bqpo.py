@@ -1,0 +1,223 @@
+"""BQPO — Block Quantization-Pruning Optimization (paper §3.3, stage 1).
+
+Per transformer block: freeze the pruning mask, run the block under
+fake-quant (STE), and optimize the *surviving weights* to match the FP
+block's outputs on calibration activations. One block in memory at a time —
+the paper's training-cost argument (Appendix A) carries over directly.
+
+Exact per-linear calibration (Hessian-diag from the true layer inputs) is
+implemented for the dense family (the paper's LLaMA models); other families
+fall back to magnitude saliency (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gqs_layer import GQSAConfig, apply_linear
+from repro.core.pruning import group_mask
+from repro.core.quant import group_minmax_params
+from repro.core.saliency import HessianStats, group_saliency, weight_saliency
+from repro.models import layers as L
+from repro.models import transformer as TF
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class BQPOConfig:
+    steps: int = 50            # optimizer steps per block ("epochs" over the
+    lr: float = 1e-5           # calibration set in the paper; steps here)
+    b1: float = 0.9
+    b2: float = 0.999
+
+
+# ---------------------------------------------------------------------------
+# calibration capture (dense family): exact inputs of every linear
+# ---------------------------------------------------------------------------
+
+def capture_block_io(params: Dict, tokens: jnp.ndarray, cfg):
+    """Run the FP model, returning (h_in[l], h_out[l]) for every layer.
+    h: [L, B, S, d]."""
+    h = TF.embed_tokens(params, tokens, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(hh, lp):
+        out, _ = TF._block(lp, hh, positions, cfg, None, False)
+        return out, hh                     # ys = layer input
+
+    h_last, h_ins = jax.lax.scan(body, h, params["layers"])
+    h_outs = jnp.concatenate([h_ins[1:], h_last[None]], axis=0)
+    return h_ins, h_outs
+
+
+def linear_input_taps(lp: Dict, h: jnp.ndarray, positions, cfg) -> Dict:
+    """Exact inputs of each linear in a dense block (for Hessian stats)."""
+    taps = {}
+    hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    taps["wq"] = hn
+    taps["wk"] = hn
+    taps["wv"] = hn
+    b, s, _ = h.shape
+    q, k, v = L.attn_qkv(lp["attn"], hn, positions, cfg, False)
+    o = L.flash_attention(q, k, v, causal=True,
+                          block_q=cfg.attn_block_q,
+                          block_k=cfg.attn_block_k)
+    taps["wo"] = o.reshape(b, s, -1)
+    a = apply_linear(lp["attn"]["wo"], taps["wo"])
+    h2 = h + a
+    hn2 = L.rmsnorm(h2, lp["ln2"], cfg.norm_eps)
+    taps["wg"] = hn2
+    taps["wu"] = hn2
+    if cfg.mlp_type == "swiglu":
+        g = apply_linear(lp["mlp"]["wg"], hn2)
+        u = apply_linear(lp["mlp"]["wu"], hn2)
+        taps["wd"] = jax.nn.silu(g) * u
+    else:
+        u = apply_linear(lp["mlp"]["wu"], hn2)
+        taps["wd"] = jax.nn.gelu(u)
+    return taps
+
+
+def calibrate_block_stats(lp: Dict, h_batches: List[jnp.ndarray], cfg
+                          ) -> Dict[str, HessianStats]:
+    stats: Dict[str, HessianStats] = {}
+    for h in h_batches:
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        taps = linear_input_taps(lp, h, positions, cfg)
+        for name, x in taps.items():
+            if name not in stats:
+                stats[name] = HessianStats.init(x.shape[-1], diag_only=True)
+            stats[name] = stats[name].update(x)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# masks + fake-quant conversion for one block
+# ---------------------------------------------------------------------------
+
+_LINEAR_OF = {"wq": ("attn", "wq"), "wk": ("attn", "wk"),
+              "wv": ("attn", "wv"), "wo": ("attn", "wo"),
+              "wg": ("mlp", "wg"), "wu": ("mlp", "wu"),
+              "wd": ("mlp", "wd")}
+
+
+def block_to_fake_quant(lp: Dict, stats: Optional[Dict[str, HessianStats]],
+                        gqsa: GQSAConfig, with_qparams: bool = False) -> Dict:
+    """Dense block params -> fake-quant block params (masks from saliency)."""
+    out = jax.tree_util.tree_map(lambda x: x, lp)  # shallow-ish copy
+    for name, path in _LINEAR_OF.items():
+        if cfgless_missing(lp, path):
+            continue
+        node = lp[path[0]][path[1]]
+        w = node["w"]
+        from repro.core.saliency import saliency_by_mode
+        sal = saliency_by_mode(w, (stats or {}).get(name),
+                               mode=gqsa.saliency, exact=gqsa.exact_hessian)
+        gsal = group_saliency(sal, gqsa.prune.group_size)
+        gm = group_mask(gsal, gqsa.prune)
+        new = {"w": w, "gmask": gm}
+        if with_qparams:
+            s, z = group_minmax_params(w, gqsa.quant)
+            new["scale"], new["zero"] = s, z
+        out[path[0]] = dict(out[path[0]])
+        out[path[0]][path[1]] = new
+    return out
+
+
+def cfgless_missing(lp, path):
+    node = lp
+    for k in path:
+        if not isinstance(node, dict) or k not in node:
+            return True
+        node = node[k]
+    return False
+
+
+# ---------------------------------------------------------------------------
+# the block-wise optimization loop
+# ---------------------------------------------------------------------------
+
+def bqpo_block(lp_fq: Dict, h_ins: List[jnp.ndarray],
+               h_outs: List[jnp.ndarray], cfg, gqsa: GQSAConfig,
+               bcfg: BQPOConfig) -> Dict:
+    """Optimize one fake-quant block to match FP outputs. Returns params."""
+    from repro.core.partition import merge, partition
+    opt_cfg = adamw.AdamWConfig(lr=bcfg.lr, b1=bcfg.b1, b2=bcfg.b2,
+                                weight_decay=0.0, grad_clip=1e9)
+    train, frozen = partition(lp_fq, r"\.w$|^w$")
+    state = adamw.init_state(train)
+
+    def loss_fn(tr, h, target):
+        lp = merge(tr, frozen)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        out, _ = TF._block(lp, h, positions, cfg, None, False)
+        return jnp.mean(jnp.square(out.astype(jnp.float32)
+                                   - target.astype(jnp.float32)))
+
+    @jax.jit
+    def step(tr, st, h, target):
+        loss, grads = jax.value_and_grad(loss_fn)(tr, h, target)
+        tr, st, _ = adamw.apply_updates(tr, grads, st, opt_cfg)
+        return tr, st, loss
+
+    n = len(h_ins)
+    last = None
+    for i in range(bcfg.steps):
+        h = h_ins[i % n]
+        t = h_outs[i % n]
+        train, state, last = step(train, state, h, t)
+    return merge(train, frozen), float(last)
+
+
+def bqpo(params: Dict, token_batches: List[jnp.ndarray], cfg,
+         gqsa: GQSAConfig, bcfg: Optional[BQPOConfig] = None,
+         verbose: bool = False):
+    """Stage 1 over the whole (dense-family) model.
+
+    Returns params with every block converted to fake-quant and optimized.
+    Embeddings / lm_head stay FP (deployment convention, DESIGN.md §4).
+    """
+    bcfg = bcfg or BQPOConfig()
+    n_layers = cfg.n_layers
+    # FP targets for every layer; inputs are then propagated through the
+    # already-compressed prefix (cascade calibration) so each block learns
+    # to undo the accumulated quantization error of its predecessors —
+    # without this, per-block MSE optimization compounds across depth.
+    outs = [capture_block_io(params, toks, cfg)[1] for toks in token_batches]
+    h_cur = []
+    for toks in token_batches:
+        h = TF.embed_tokens(params, toks, cfg)
+        h_cur.append(h)
+
+    @jax.jit
+    def fq_forward(lp, h):
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        out, _ = TF._block(lp, h, positions, cfg, None, False)
+        return out
+
+    new_layers = []
+    losses = []
+    for l in range(n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+        t_l = [ho[l] for ho in outs]
+        stats = calibrate_block_stats(lp, h_cur, cfg)
+        lp_fq = block_to_fake_quant(lp, stats, gqsa)
+        lp_fq, loss = bqpo_block(lp_fq, h_cur, t_l, cfg, gqsa, bcfg)
+        losses.append(loss)
+        if verbose:
+            print(f"[bqpo] block {l}: mse={loss:.3e}")
+        new_layers.append(lp_fq)
+        h_cur = [fq_forward(lp_fq, h) for h in h_cur]
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_layers)
+    out = dict(params)
+    out["layers"] = stacked
+    return out, losses

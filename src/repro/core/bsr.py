@@ -1,0 +1,250 @@
+"""Block-Sparse-Row storage for GQS layers (paper §3.2 + Figure 3).
+
+Canonical paper form (exact, ragged):
+    rowIndex[N+1]  -- prefix offsets; rowIndex[i+1]-rowIndex[i] = groups in row i
+    groups[nnz]    -- column index (in group units) of each surviving group
+    values[nnz, G] -- INT4 codes (packed two-per-byte -> [nnz, G/2] uint8)
+    scale/zero[nnz]
+
+TPU padded tensor form (what the models & kernels consume):
+    idx   [N, M] int32   -- kept group columns, sorted; -1 padding on ragged rows
+    vals  [N, M, G/2] u8 -- packed nibbles; padding rows are zero
+    scale [N, M] f32     -- 0 on padding (=> dequant contributes nothing)
+    zero  [N, M] f32
+M = max groups per row (== exact count in row_balanced mode).
+
+Compression accounting matches the paper: positions stored per *group*, not
+per element, so metadata amortizes over G elements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quant import (QuantConfig, group_minmax_params, quantize,
+                              pack_int4, unpack_int4)
+
+
+@dataclasses.dataclass
+class BSRMatrix:
+    """Padded tensor form. All leaves are jnp arrays (a pytree)."""
+    idx: jnp.ndarray        # [N, M] int32 (-1 = padding)
+    vals: jnp.ndarray       # [N, M, G/2] uint8
+    scale: jnp.ndarray      # [N, M] float32
+    zero: jnp.ndarray       # [N, M] float32
+    shape: Tuple[int, int]  # dense (N, K)
+    group_size: int
+    bits: int = 4
+
+    def tree_flatten(self):
+        return ((self.idx, self.vals, self.scale, self.zero),
+                (self.shape, self.group_size, self.bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        idx, vals, scale, zero = leaves
+        shape, group_size, bits = aux
+        return cls(idx=idx, vals=vals, scale=scale, zero=zero, shape=shape,
+                   group_size=group_size, bits=bits)
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def m_groups(self) -> int:
+        return self.idx.shape[1]
+
+    def nbytes_packed(self) -> int:
+        """Actual storage bytes of the compressed representation
+        (idx int32 could be int16 on K<=1M; we count what we store)."""
+        return int(self.idx.nbytes + self.vals.nbytes + self.scale.nbytes
+                   + self.zero.nbytes)
+
+    def dense_nbytes_fp16(self) -> int:
+        return 2 * self.shape[0] * self.shape[1]
+
+    def compression_ratio(self) -> float:
+        return self.dense_nbytes_fp16() / self.nbytes_packed()
+
+
+import jax.tree_util
+jax.tree_util.register_pytree_node(
+    BSRMatrix, BSRMatrix.tree_flatten, BSRMatrix.tree_unflatten)
+
+
+def pack_dense(w: jnp.ndarray, gmask: jnp.ndarray,
+               qcfg: QuantConfig) -> BSRMatrix:
+    """Dense W [N, K] + group mask [N, K/G] -> padded BSR with per-group
+    INT4 quantization of the surviving groups."""
+    n, k = w.shape
+    g = qcfg.group_size
+    ngroups = k // g
+    gm = np.asarray(gmask)
+    counts = gm.sum(axis=1)
+    m = int(counts.max()) if counts.size else 0
+    m = max(m, 1)
+
+    if counts.size and counts.min() == counts.max():
+        # row-balanced fast path: nonzero() is row-major => already sorted
+        idx = np.nonzero(gm)[1].reshape(n, m).astype(np.int32)
+    else:
+        idx = np.full((n, m), -1, dtype=np.int32)
+        for i in range(n):
+            cols = np.nonzero(gm[i])[0]
+            idx[i, :cols.shape[0]] = np.sort(cols)
+    idx_j = jnp.asarray(idx)
+
+    # Gather surviving groups: [N, M, G] (padding rows gather group 0, then
+    # get zeroed via scale=0).
+    wg = w.reshape(n, ngroups, g)
+    safe_idx = jnp.maximum(idx_j, 0)
+    taken = jnp.take_along_axis(wg, safe_idx[..., None], axis=1)  # [N, M, G]
+
+    scale, zero = group_minmax_params(taken.reshape(n, m * g),
+                                      QuantConfig(bits=qcfg.bits, group_size=g))
+    scale = scale.reshape(n, m)
+    zero = zero.reshape(n, m)
+    q = quantize(taken.reshape(n, m * g), scale.reshape(n, m),
+                 zero.reshape(n, m),
+                 QuantConfig(bits=qcfg.bits, group_size=g)).reshape(n, m, g)
+
+    pad = (idx_j < 0)
+    scale = jnp.where(pad, 0.0, scale)
+    zero = jnp.where(pad, 0.0, zero)
+    q = jnp.where(pad[..., None], 0, q)
+    vals = pack_int4(q)
+    return BSRMatrix(idx=idx_j, vals=vals, scale=scale.astype(jnp.float32),
+                     zero=zero.astype(jnp.float32), shape=(n, k),
+                     group_size=g, bits=qcfg.bits)
+
+
+def pack_quantized(q_codes: jnp.ndarray, gmask: jnp.ndarray,
+                   scale: jnp.ndarray, zero: jnp.ndarray,
+                   group_size: int, bits: int = 4) -> BSRMatrix:
+    """Pack *already-quantized* codes with their (trained) scale/zero —
+    the E2E-OQP output path, preserving the fine-tuned quant params exactly.
+
+    q_codes: [N, K] uint8; gmask/scale/zero: [N, K/G].
+    """
+    n, k = q_codes.shape
+    g = group_size
+    ngroups = k // g
+    gm = np.asarray(gmask)
+    counts = gm.sum(axis=1)
+    m = max(int(counts.max()) if counts.size else 0, 1)
+    if counts.size and counts.min() == counts.max():
+        idx = np.nonzero(gm)[1].reshape(n, m).astype(np.int32)
+    else:
+        idx = np.full((n, m), -1, dtype=np.int32)
+        for i in range(n):
+            cols = np.nonzero(gm[i])[0]
+            idx[i, :cols.shape[0]] = np.sort(cols)
+    idx_j = jnp.asarray(idx)
+    safe = jnp.maximum(idx_j, 0)
+    qg = q_codes.reshape(n, ngroups, g)
+    taken = jnp.take_along_axis(qg, safe[..., None], axis=1)   # [N, M, G]
+    sc = jnp.take_along_axis(scale, safe, axis=1)
+    zc = jnp.take_along_axis(zero, safe, axis=1)
+    pad = idx_j < 0
+    sc = jnp.where(pad, 0.0, sc)
+    zc = jnp.where(pad, 0.0, zc)
+    taken = jnp.where(pad[..., None], 0, taken)
+    return BSRMatrix(idx=idx_j, vals=pack_int4(taken),
+                     scale=sc.astype(jnp.float32),
+                     zero=zc.astype(jnp.float32), shape=(n, k),
+                     group_size=g, bits=bits)
+
+
+def to_dense(bsr: BSRMatrix, dtype=jnp.float32) -> jnp.ndarray:
+    """Decompress to dense [N, K] (pruned groups = 0)."""
+    n, k = bsr.shape
+    g = bsr.group_size
+    ngroups = k // g
+    q = unpack_int4(bsr.vals).astype(jnp.float32)          # [N, M, G]
+    deq = (q - bsr.zero[..., None]) * bsr.scale[..., None]  # [N, M, G]
+    out = jnp.zeros((n, ngroups, g), jnp.float32)
+    safe_idx = jnp.maximum(bsr.idx, 0)
+    # scatter-add; padding slots have scale 0 => contribute 0 to group 0
+    out = out.at[jnp.arange(n)[:, None], safe_idx].add(deq)
+    return out.reshape(n, k).astype(dtype)
+
+
+def to_paper_bsr(bsr: BSRMatrix):
+    """Padded form -> the paper's exact (rowIndex, groups, values) arrays
+    (numpy; used for storage accounting and format tests)."""
+    idx = np.asarray(bsr.idx)
+    vals = np.asarray(bsr.vals)
+    scale = np.asarray(bsr.scale)
+    zero = np.asarray(bsr.zero)
+    n, m = idx.shape
+    row_index = np.zeros(n + 1, dtype=np.int64)
+    groups, values, scales, zeros = [], [], [], []
+    for i in range(n):
+        cols = idx[i][idx[i] >= 0]
+        row_index[i + 1] = row_index[i] + cols.shape[0]
+        for j, c in enumerate(cols):
+            groups.append(c)
+            values.append(vals[i, j])
+            scales.append(scale[i, j])
+            zeros.append(zero[i, j])
+    return (row_index, np.asarray(groups, np.int32),
+            np.stack(values) if values else np.zeros((0, bsr.group_size // 2),
+                                                     np.uint8),
+            np.asarray(scales, np.float32), np.asarray(zeros, np.float32))
+
+
+def paper_bsr_nbytes(row_index, groups, values, scales, zeros,
+                     bits: int = 4) -> int:
+    """Exact ragged-format byte count (int16 group cols suffice for K/G<2^15,
+    fp16 scale + u8 zero as deployed)."""
+    return int(row_index.shape[0] * 4 + groups.shape[0] * 2
+               + values.size + scales.shape[0] * 2 + zeros.shape[0] * 1)
+
+
+# ---------------------------------------------------------------------------
+# Task-centric work list (paper §3.5, Stream-K adapted to the TPU grid).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkList:
+    """Flattened, equal-size work items for the sparse kernel.
+
+    Each item = (row_block r, slot range [chunk*BM, chunk*BM+BM) of the padded
+    group slots of that row block). Ragged rows make the number of *useful*
+    chunks vary per row block; flattening them into one 1-D grid equalizes
+    per-step latency (the TPU analogue of Stream-K's work-centric
+    decomposition). ``first`` marks items that initialize their output tile.
+    """
+    row_block: jnp.ndarray   # [W] int32
+    chunk: jnp.ndarray       # [W] int32
+    first: jnp.ndarray       # [W] int32 (1 = first visit of this row block)
+    n_items: int
+
+
+def build_work_list(idx: jnp.ndarray, block_n: int, block_m: int) -> WorkList:
+    """idx: [N, M] padded kept-group columns (-1 pad). Static (numpy) build --
+    runs offline at pack time, like the paper's pre-processing."""
+    idx_np = np.asarray(idx)
+    n, m = idx_np.shape
+    nrb = (n + block_n - 1) // block_n
+    rows, chunks, firsts = [], [], []
+    for r in range(nrb):
+        blk = idx_np[r * block_n:(r + 1) * block_n]
+        useful = int((blk >= 0).sum(axis=1).max()) if blk.size else 0
+        nch = max(1, (useful + block_m - 1) // block_m)
+        for c in range(nch):
+            rows.append(r)
+            chunks.append(c)
+            firsts.append(1 if c == 0 else 0)
+    return WorkList(row_block=jnp.asarray(rows, jnp.int32),
+                    chunk=jnp.asarray(chunks, jnp.int32),
+                    first=jnp.asarray(firsts, jnp.int32),
+                    n_items=len(rows))

@@ -1,0 +1,86 @@
+"""E2E-OQP — End-to-End Optimized Quantization-Pruning (paper §3.4, stage 2).
+
+The backbone INT codes are frozen (quantized once from the BQPO weights);
+only the per-group quantization parameters (scale, zero) are trained against
+the full-network LM objective. Dequant ``(q - z) * s`` is linear in (s, z),
+so no STE is involved; pruned groups are excluded by the (frozen) mask —
+exactly the paper's "no sparse masks needed at fine-tune time" property once
+packed, which we verify by asserting packed == frozen-int forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import GQSAConfig
+from repro.core.partition import merge, partition
+from repro.core.quant import group_minmax_params, quantize
+from repro.models.registry import get_model, lm_loss
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class E2EConfig:
+    steps: int = 100
+    lr: float = 1e-5
+
+
+def freeze_int(params_fq: Dict, gqsa: GQSAConfig) -> Dict:
+    """fake-quant tree (w + gmask [+ scale/zero]) -> frozen-int tree
+    (q codes + gmask + scale + zero), leaving non-GQS leaves untouched."""
+    def walk(node):
+        if isinstance(node, dict) and "gmask" in node and "w" in node:
+            w = node["w"]
+            lead = w.shape[:-2]
+            n, k = w.shape[-2:]
+            wf = w.reshape((-1, n, k))
+            qs, ss, zs = [], [], []
+            for i in range(wf.shape[0]):
+                s, z = group_minmax_params(wf[i], gqsa.quant)
+                qs.append(quantize(wf[i], s, z, gqsa.quant))
+                ss.append(s)
+                zs.append(z)
+            q = jnp.stack(qs).reshape(lead + (n, k))
+            s = jnp.stack(ss).reshape(lead + ss[0].shape)
+            z = jnp.stack(zs).reshape(lead + zs[0].shape)
+            return {"q": q, "gmask": node["gmask"],
+                    "scale": s, "zero": z}
+        if isinstance(node, dict):
+            return {k2: walk(v) for k2, v in node.items()}
+        return node
+    return walk(params_fq)
+
+
+def e2e_oqp(params_frozen: Dict, token_batches: List[Dict], cfg,
+            ecfg: Optional[E2EConfig] = None, verbose: bool = False):
+    """Train only scale/zero leaves of frozen-int GQS layers, end to end."""
+    ecfg = ecfg or E2EConfig()
+    api = get_model(cfg)
+    # scale/zero that live next to a "q" sibling are the trainables
+    train, frozen = partition(params_frozen, r"\.(scale|zero)$")
+    opt_cfg = adamw.AdamWConfig(lr=ecfg.lr, weight_decay=0.0, grad_clip=1.0)
+    state = adamw.init_state(train)
+
+    def loss_fn(tr, batch):
+        p = merge(tr, frozen)
+        logits, aux = api.forward(p, batch, cfg)
+        return lm_loss(logits, batch["labels"]) + 1e-2 * aux
+
+    @jax.jit
+    def step(tr, st, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(tr, batch)
+        tr, st, _ = adamw.apply_updates(tr, grads, st, opt_cfg)
+        return tr, st, loss
+
+    n = len(token_batches)
+    losses = []
+    for i in range(ecfg.steps):
+        batch = token_batches[i % n]
+        train, state, loss = step(train, state, batch)
+        losses.append(float(loss))
+        if verbose and i % 10 == 0:
+            print(f"[e2e-oqp] step {i}: loss={losses[-1]:.4f}")
+    return merge(train, frozen), losses

@@ -1,0 +1,172 @@
+"""GQS layer (paper §3.2): the drop-in replacement for Linear.
+
+A linear layer's parameters take one of four *representations*; the model
+code calls :func:`apply_linear` and dispatches on which leaves are present,
+so the same model definition runs FP training, fake-quant optimization
+(BQPO / E2E-OQP), and packed-BSR serving.
+
+    fp          {"w": [N,K] (, "b")}
+    fake_quant  {"w", "gmask" [N,K/G] bool (, "scale","zero" [N,K/G])}
+    w4          {"qw" packed u8 [N,K/2], "scale","zero" [N,K/G]}   dense quant
+    gqsa        {"bsr": BSRMatrix}                                  quant+sparse
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pruning
+from repro.core.bsr import BSRMatrix, pack_dense
+from repro.core.quant import (QuantConfig, fake_quant, group_minmax_params,
+                              pack_int4, quantize)
+from repro.core.pruning import PruneConfig, expand_mask, group_mask
+from repro.core.saliency import (HessianStats, group_saliency,
+                                 weight_saliency)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class GQSAConfig:
+    """End-to-end compression configuration (paper W4 S{20..50} G16).
+
+    ``saliency``: "hessian" (paper eq. 4, diag approx), "wanda"
+    (|w|*sqrt(E x^2)) or "magnitude" (w^2). On our from-scratch benchmark
+    models the shared per-input-dim Hessian factor correlates row masks
+    (prunes whole input dims) and magnitude wins one-shot; with the full
+    two-stage pipeline all three converge (see benchmarks/fig_saliency).
+    """
+    quant: QuantConfig = QuantConfig(bits=4, group_size=16)
+    prune: PruneConfig = PruneConfig(sparsity=0.5, group_size=16,
+                                     row_balanced=True)
+    exact_hessian: bool = False
+    saliency: str = "hessian"
+
+    def __post_init__(self):
+        if self.quant.group_size != self.prune.group_size:
+            raise ValueError("quant and prune group sizes must match: the "
+                             "group is both the quant and the prune unit")
+
+
+def apply_linear(p: Dict, x: jnp.ndarray, *, qcfg: Optional[QuantConfig] = None,
+                 use_pallas: bool = False) -> jnp.ndarray:
+    """x: [..., K] -> [..., N]; dispatch on the parameter representation."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if isinstance(p, dict) and "bsr" in p:
+        bsr = p["bsr"]
+        y = kops.gqsa_gemv(x2, bsr, use_pallas=use_pallas)
+        y = y.astype(x.dtype)
+    elif isinstance(p, dict) and "qw" in p:
+        g = k // p["scale"].shape[-1]
+        y = kops.w4_matmul(x2, p["qw"], p["scale"], p["zero"],
+                           group_size=g,
+                           use_pallas=use_pallas).astype(x.dtype)
+    elif isinstance(p, dict) and "q" in p:
+        # E2E-OQP: frozen INT codes, trainable (scale, zero) — dequant is
+        # linear in (s, z) so gradients flow to them with no STE
+        from repro.core.quant import dequantize
+        k2 = p["q"].shape[-1]
+        g = k2 // p["scale"].shape[-1]
+        w = dequantize(jax.lax.stop_gradient(p["q"]), p["scale"], p["zero"],
+                       QuantConfig(group_size=g))
+        mask = expand_mask(jax.lax.stop_gradient(p["gmask"]),
+                           g).astype(w.dtype)
+        y = x2 @ (w * mask).astype(x.dtype).T
+    elif isinstance(p, dict) and "gmask" in p:
+        if qcfg is None:
+            # group structure is encoded in the mask; bits default to the
+            # paper's W4
+            g = p["w"].shape[-1] // p["gmask"].shape[-1]
+            qcfg = QuantConfig(bits=4, group_size=g)
+        w = fake_quant(p["w"], qcfg, p.get("scale"), p.get("zero"))
+        mask = expand_mask(jax.lax.stop_gradient(p["gmask"]),
+                           qcfg.group_size).astype(w.dtype)
+        y = x2 @ (w * mask).astype(x.dtype).T
+    else:
+        # params may be stored f32; compute in the activation dtype
+        y = x2 @ p["w"].astype(x.dtype).T
+    if isinstance(p, dict) and "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# Representation conversions (the offline compression steps).
+# ---------------------------------------------------------------------------
+
+def make_fake_quant(w: jnp.ndarray, stats: HessianStats,
+                    cfg: GQSAConfig, with_qparams: bool = False) -> Dict:
+    """FP weight + calibration stats -> fake-quant params (stage-1 input)."""
+    sal = weight_saliency(w, stats, exact=cfg.exact_hessian)
+    gsal = group_saliency(sal, cfg.prune.group_size)
+    gmask = group_mask(gsal, cfg.prune)
+    p = {"w": w, "gmask": gmask}
+    if with_qparams:
+        s, z = group_minmax_params(w, cfg.quant)
+        p["scale"], p["zero"] = s, z
+    return p
+
+
+def pack_gqsa(p_fake: Dict, cfg: GQSAConfig) -> Dict:
+    """fake-quant params -> packed BSR serving params."""
+    return {"bsr": pack_dense(p_fake["w"], p_fake["gmask"], cfg.quant)}
+
+
+def pack_w4(w: jnp.ndarray, qcfg: QuantConfig) -> Dict:
+    """FP weight -> dense W<=4 serving params (quantization-only baseline).
+    Nibble packing only holds codes < 16; wider bit-widths use the
+    fake-quant (dense FP) representation instead."""
+    if qcfg.bits > 4:
+        raise ValueError("pack_w4 packs two codes per byte: bits must be "
+                         "<= 4 (use fake_quant for W8)")
+    s, z = group_minmax_params(w, qcfg)
+    q = quantize(w, s, z, qcfg)
+    return {"qw": pack_int4(q), "scale": s, "zero": z}
+
+
+def compress_linear(w: jnp.ndarray, stats: HessianStats,
+                    cfg: GQSAConfig) -> Dict:
+    """One-shot (no BQPO) FP -> packed GQSA params."""
+    return pack_gqsa(make_fake_quant(w, stats, cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Shape-only construction for the dry-run (no allocation, no numpy loops).
+# ---------------------------------------------------------------------------
+
+def packed_linear_shapes(n: int, k: int, cfg: GQSAConfig) -> Dict:
+    """ShapeDtypeStructs of the packed representation for (n, k)."""
+    g = cfg.prune.group_size
+    m = pruning.groups_kept_per_row(k, cfg.prune)
+    sds = jax.ShapeDtypeStruct
+    bsr = BSRMatrix(
+        idx=sds((n, m), jnp.int32),
+        vals=sds((n, m, g // 2), jnp.uint8),
+        scale=sds((n, m), jnp.float32),
+        zero=sds((n, m), jnp.float32),
+        shape=(n, k), group_size=g, bits=cfg.quant.bits)
+    return {"bsr": bsr}
+
+
+def dequant_dense(p: Dict, qcfg: Optional[QuantConfig] = None) -> jnp.ndarray:
+    """Any representation -> dense FP weight (for tests / analysis)."""
+    from repro.core.bsr import to_dense
+    from repro.core.quant import dequantize, unpack_int4
+    if "bsr" in p:
+        return to_dense(p["bsr"])
+    if "qw" in p:
+        k2 = p["qw"].shape[1] * 2
+        g = k2 // p["scale"].shape[-1]
+        q = unpack_int4(p["qw"])
+        return dequantize(q, p["scale"], p["zero"],
+                          QuantConfig(group_size=g))
+    if "gmask" in p:
+        assert qcfg is not None
+        w = fake_quant(p["w"], qcfg, p.get("scale"), p.get("zero"))
+        return w * expand_mask(p["gmask"], qcfg.group_size).astype(w.dtype)
+    return p["w"]

@@ -1,0 +1,139 @@
+"""Whole-model GQSA compression: walk a parameter tree and replace every
+eligible linear's {"w"} with the packed-BSR serving representation.
+
+Eligible = the decode-path GEMV weights (attention projections, MLP /
+expert FFNs, SSM in/out projections, MLA low-rank projections). Excluded =
+embeddings, lm_head (kept FP16 as deployed engines do), norms, MLA w_uk/w_uv
+(einsum-form, DESIGN.md §6), conv/ssm scalars, routers.
+
+Handles weight stacking: leaves may be [L, N, K] (scan layers) or
+[L, E, N, K] (scan layers x experts) — each 2-D slice is packed and the BSR
+leaves are re-stacked, so the scan-based model code slices them layer by
+layer exactly like dense weights.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BSRMatrix, pack_dense
+from repro.core.gqs_layer import GQSAConfig, packed_linear_shapes, pack_w4
+from repro.core.pruning import PruneConfig, group_mask
+from repro.core.quant import QuantConfig, group_minmax_params, quantize, \
+    pack_int4
+from repro.core.saliency import HessianStats, group_saliency, weight_saliency
+
+COMPRESSIBLE = re.compile(
+    r"(wq|wk|wv|wo|wg|wu|wd|w_qa|w_qb|w_kva|in_proj|out_proj)$")
+EXCLUDED = re.compile(r"(router|shared_?$)")  # routers stay FP
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        parts.append(str(getattr(e, "key", getattr(e, "idx", e))))
+    return ".".join(parts)
+
+
+def _is_compressible(pstr: str) -> bool:
+    return bool(COMPRESSIBLE.search(pstr)) and not EXCLUDED.search(pstr)
+
+
+def _walk(node, path, fn):
+    """Replace {"w": leaf} dicts at compressible paths via fn(pstr, leaf)."""
+    if isinstance(node, dict):
+        if set(node.keys()) >= {"w"} and len(node) <= 2 and \
+                _is_compressible(path):
+            return fn(path, node)
+        return {k: _walk(v, f"{path}.{k}" if path else k, fn)
+                for k, v in node.items()}
+    return node
+
+
+def _pack_stacked(w: np.ndarray, cfg: GQSAConfig,
+                  sal_fn: Optional[Callable] = None) -> BSRMatrix:
+    """w: [..., N, K] -> BSRMatrix with leading dims stacked on each leaf."""
+    lead = w.shape[:-2]
+    n, k = w.shape[-2:]
+    flat = w.reshape(-1, n, k)
+    packed = []
+    for i in range(flat.shape[0]):
+        wi = jnp.asarray(flat[i])
+        sal = sal_fn(wi) if sal_fn is not None else _magnitude_sal(wi)
+        gsal = group_saliency(sal, cfg.prune.group_size)
+        gm = group_mask(gsal, cfg.prune)
+        packed.append(pack_dense(wi, gm, cfg.quant))
+    if not lead:
+        return packed[0]
+    stack = lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape)
+    return jax.tree_util.tree_map(stack, *packed)
+
+
+# HessianStats has no _replace_uniform; provide magnitude fallback directly
+def _magnitude_sal(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.square(w.astype(jnp.float32))
+
+
+def compress_params(params, cfg, gqsa: GQSAConfig,
+                    stats: Optional[Dict[str, HessianStats]] = None):
+    """FP param tree -> serving tree with packed GQS layers.
+
+    ``stats`` maps path-string -> HessianStats (exact calibration). Layers
+    without stats fall back to magnitude saliency (documented approximation
+    for stacked/looped layers; the BQPO/E2E stages recover the gap).
+    """
+    def fn(pstr, node):
+        w = node["w"]
+        st = (stats or {}).get(pstr)
+        if st is not None:
+            sal_fn = lambda wi: weight_saliency(wi, st)
+        else:
+            sal_fn = _magnitude_sal
+        return {"bsr": _pack_stacked(np.asarray(w), gqsa, sal_fn)}
+
+    return _walk(params, "", fn)
+
+
+def compress_params_w4(params, cfg, qcfg: QuantConfig):
+    """Quantization-only baseline (dense W4, no pruning)."""
+    def fn(pstr, node):
+        w = node["w"]
+        lead = w.shape[:-2]
+        n, k = w.shape[-2:]
+        flat = jnp.reshape(w, (-1, n, k))
+        packs = [pack_w4(flat[i], qcfg) for i in range(flat.shape[0])]
+        if not lead:
+            return packs[0]
+        stack = lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape)
+        return jax.tree_util.tree_map(stack, *packs)
+    return _walk(params, "", fn)
+
+
+def compress_params_shapes(params_template, cfg, gqsa: GQSAConfig):
+    """ShapeDtypeStruct version for the dry-run (no data, no loops)."""
+    def fn(pstr, node):
+        w = node["w"]
+        lead = w.shape[:-2]
+        n, k = w.shape[-2:]
+        base = packed_linear_shapes(n, k, gqsa)["bsr"]
+
+        def lift(l):
+            return jax.ShapeDtypeStruct(lead + l.shape, l.dtype)
+        leaves, treedef = jax.tree_util.tree_flatten(base)
+        return {"bsr": treedef.unflatten([lift(l) for l in leaves])}
+
+    return _walk(params_template, "", fn)
+
+
+def compression_report(fp_params, packed_params) -> dict:
+    def nbytes(t):
+        return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(t))
+    fp = float(nbytes(fp_params))
+    pk = float(nbytes(packed_params))
+    return {"fp32_bytes": fp, "fp16_bytes": fp / 2, "packed_bytes": pk,
+            "ratio_vs_fp16": (fp / 2) / pk}

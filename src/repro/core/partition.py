@@ -1,0 +1,45 @@
+"""Split a param tree into (trainable, frozen) halves by leaf path — used by
+BQPO (train only surviving weights) and E2E-OQP (train only scale/zero)."""
+from __future__ import annotations
+
+import re
+from typing import Callable, Tuple
+
+import jax
+
+
+def _path_str(path) -> str:
+    return ".".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                    for e in path)
+
+
+def partition(tree, pattern: str) -> Tuple:
+    """Returns (trainable, frozen): same treedef, None at the other side."""
+    pat = re.compile(pattern)
+
+    def pick(path, leaf):
+        return leaf if pat.search(_path_str(path)) else None
+
+    def drop(path, leaf):
+        return None if pat.search(_path_str(path)) else leaf
+
+    train = jax.tree_util.tree_map_with_path(pick, tree)
+    frozen = jax.tree_util.tree_map_with_path(drop, tree)
+    return train, frozen
+
+
+def merge(a, b):
+    """Recombine two partition() halves (None marks the absent side).
+
+    Manual recursion: None is an *empty pytree node* to jax, so the two
+    halves have different treedefs and tree_map cannot zip them.
+    """
+    if a is None:
+        return b
+    if b is None:
+        return a
+    if isinstance(a, dict):
+        return {k: merge(a[k], b[k]) for k in a}
+    if isinstance(a, (list, tuple)):
+        return type(a)(merge(x, y) for x, y in zip(a, b))
+    return a

@@ -1,0 +1,97 @@
+"""Group pruning: which 1xG groups survive (paper §3.2).
+
+Modes:
+  * row_balanced (TPU default, beyond-paper): every output row keeps exactly
+    its top-M groups by saliency. Rectangular storage, perfectly balanced
+    compute -> no stragglers by construction.
+  * global threshold (paper-faithful): keep the globally most salient groups
+    at the target sparsity; rows end up ragged -> exercised by the
+    task-centric kernel work list.
+  * two_four: classic 2:4 semi-structured baseline (for comparisons).
+  * magnitude: |w| instead of Hessian saliency (ablation baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    sparsity: float = 0.5          # fraction of groups removed
+    group_size: int = 16
+    row_balanced: bool = True
+
+
+def groups_kept_per_row(k: int, cfg: PruneConfig) -> int:
+    """M = ceil(K/G * (1 - sparsity)), >= 1."""
+    ngroups = k // cfg.group_size
+    return max(1, int(round(ngroups * (1.0 - cfg.sparsity))))
+
+
+def row_balanced_mask(gsal: jnp.ndarray, cfg: PruneConfig) -> jnp.ndarray:
+    """Per-row top-M group mask. gsal: [N, K/G] -> bool [N, K/G]."""
+    n, ngroups = gsal.shape
+    m = groups_kept_per_row(ngroups * cfg.group_size, cfg)
+    idx = jnp.argsort(gsal, axis=-1, descending=True)[:, :m]
+    mask = jnp.zeros_like(gsal, dtype=bool)
+    mask = mask.at[jnp.arange(n)[:, None], idx].set(True)
+    return mask
+
+
+def global_threshold_mask(gsal: jnp.ndarray, cfg: PruneConfig) -> jnp.ndarray:
+    """Keep globally top (1-s) fraction of groups. Ragged rows."""
+    flat = gsal.reshape(-1)
+    keep = max(1, int(round(flat.shape[0] * (1.0 - cfg.sparsity))))
+    thresh = jnp.sort(flat, descending=True)[keep - 1]
+    return gsal >= thresh
+
+
+def group_mask(gsal: jnp.ndarray, cfg: PruneConfig) -> jnp.ndarray:
+    if cfg.row_balanced:
+        return row_balanced_mask(gsal, cfg)
+    return global_threshold_mask(gsal, cfg)
+
+
+def expand_mask(gmask: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """[N, K/G] bool -> [N, K] bool (broadcast within groups)."""
+    return jnp.repeat(gmask, group_size, axis=-1)
+
+
+def two_four_mask(sal: jnp.ndarray) -> jnp.ndarray:
+    """2:4 semi-structured: keep top-2 of every 4 consecutive elements.
+
+    sal: per-element saliency [N, K] (K % 4 == 0) -> bool [N, K].
+    """
+    n, k = sal.shape
+    s4 = sal.reshape(n, k // 4, 4)
+    idx = jnp.argsort(s4, axis=-1, descending=True)[..., :2]
+    mask = jnp.zeros_like(s4, dtype=bool)
+    mask = mask.at[jnp.arange(n)[:, None, None],
+                   jnp.arange(k // 4)[None, :, None], idx].set(True)
+    return mask.reshape(n, k)
+
+
+def magnitude_saliency(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.abs(w.astype(jnp.float32))
+
+
+def mask_sparsity(mask: jnp.ndarray) -> float:
+    return float(1.0 - jnp.mean(mask.astype(jnp.float32)))
+
+
+def kept_indices_row_balanced(
+    gsal: jnp.ndarray, cfg: PruneConfig
+) -> Tuple[jnp.ndarray, int]:
+    """Sorted kept-group column indices per row: [N, M] int32, plus M.
+
+    Sorting the kept indices keeps the BSR column stream monotone per row,
+    which the kernels rely on for coalesced activation tiles.
+    """
+    n, ngroups = gsal.shape
+    m = groups_kept_per_row(ngroups * cfg.group_size, cfg)
+    top = jnp.argsort(gsal, axis=-1, descending=True)[:, :m]
+    return jnp.sort(top, axis=-1).astype(jnp.int32), m

@@ -1,0 +1,146 @@
+"""Per-group asymmetric uniform quantization (paper §3.1, eqs. 1-3).
+
+Weights W[out, in] are grouped along the *input* (last) dimension in
+contiguous groups of ``group_size`` (the paper's "1xN" mode). Each group gets
+its own (scale, zero). Quantized codes live in [0, 2^bits - 1].
+
+Three faces of the same math:
+  * ``quantize`` / ``dequantize``     -- integer codes (storage / serving)
+  * ``fake_quant``                    -- STE quant-dequant (training / BQPO)
+  * ``pack_int4`` / ``unpack_int4``   -- two codes per uint8 byte
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 4
+    group_size: int = 16
+    # Clip optimization range-shrink factor bounds used by BQPO/E2E-OQP.
+    min_scale: float = 1e-8
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+
+def _group(w: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """[..., K] -> [..., K/G, G]."""
+    if w.shape[-1] % group_size != 0:
+        raise ValueError(
+            f"last dim {w.shape[-1]} not divisible by group_size {group_size}")
+    return w.reshape(*w.shape[:-1], w.shape[-1] // group_size, group_size)
+
+
+def _ungroup(w: jnp.ndarray) -> jnp.ndarray:
+    """[..., K/G, G] -> [..., K]."""
+    return w.reshape(*w.shape[:-2], w.shape[-2] * w.shape[-1])
+
+
+def group_minmax_params(
+    w: jnp.ndarray, cfg: QuantConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale/zero from per-group min/max (eq. 1). Returns (scale, zero),
+    each shaped [..., K/G]."""
+    g = _group(w.astype(jnp.float32), cfg.group_size)
+    wmax = jnp.max(g, axis=-1)
+    wmin = jnp.min(g, axis=-1)
+    scale = jnp.maximum((wmax - wmin) / cfg.levels, cfg.min_scale)
+    zero = jnp.round(-wmin / scale)
+    return scale, zero
+
+
+def quantize(
+    w: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, cfg: QuantConfig
+) -> jnp.ndarray:
+    """eq. 2: codes in [0, 2^bits - 1], shaped like w, dtype uint8."""
+    g = _group(w.astype(jnp.float32), cfg.group_size)
+    q = jnp.clip(jnp.round(g / scale[..., None]) + zero[..., None],
+                 0, cfg.levels)
+    return _ungroup(q).astype(jnp.uint8)
+
+
+def dequantize(
+    q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, cfg: QuantConfig,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """eq. 3: (q - z) * s."""
+    g = _group(q.astype(jnp.float32), cfg.group_size)
+    w = (g - zero[..., None]) * scale[..., None]
+    return _ungroup(w).astype(dtype)
+
+
+def fake_quant(
+    w: jnp.ndarray,
+    cfg: QuantConfig,
+    scale: jnp.ndarray | None = None,
+    zero: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Quant-dequant with a straight-through estimator.
+
+    If scale/zero are given they are *trainable leaves* (E2E-OQP); gradients
+    flow to them through the dequant expression while the rounding is STE'd.
+    """
+    if scale is None or zero is None:
+        s, z = group_minmax_params(w, cfg)
+        # min/max params depend on w only through (max, min); STE the whole
+        # round-trip wrt w.
+        s, z = jax.lax.stop_gradient(s), jax.lax.stop_gradient(z)
+    else:
+        s = jnp.maximum(scale, cfg.min_scale)
+        z = zero
+    g = _group(w.astype(jnp.float32), cfg.group_size)
+    inv = 1.0 / s[..., None]
+    q_soft = g * inv + z[..., None]
+    q_hard = jnp.clip(jnp.round(q_soft), 0, cfg.levels)
+    # STE: forward uses q_hard, backward sees q_soft (identity through round,
+    # zero through the clip boundary).
+    q = q_soft + jax.lax.stop_gradient(q_hard - q_soft)
+    wq = (q - z[..., None]) * s[..., None]
+    return _ungroup(wq).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 <-> uint8 nibble packing (little-endian within the byte: element 2i in
+# the low nibble, 2i+1 in the high nibble).
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """uint8 codes in [0,15], last dim even -> packed uint8, last dim K/2."""
+    if q.shape[-1] % 2 != 0:
+        raise ValueError("last dim must be even to pack nibbles")
+    lo = q[..., 0::2].astype(jnp.uint8)
+    hi = q[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """packed uint8 -> uint8 codes, last dim doubled."""
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def quant_error_bound(scale: jnp.ndarray) -> jnp.ndarray:
+    """Worst-case |w - deq(quant(w))| for in-range w: s/2."""
+    return scale / 2.0
+
+
+def int8_symmetric_quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 (activations / gradient compression)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_symmetric_dequant(q: jnp.ndarray, scale: jnp.ndarray,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,120 @@
+"""Hessian-based weight saliency (paper §3.1, eq. 4) and calibration stats.
+
+For a linear layer y = x @ W.T with W[out, in], the layer Hessian wrt W rows
+is H = 2 * E[x x^T]  (same for every output row). The paper scores
+``s_i = w_i^2 / [H^-1]_ii^2`` and averages within each 1xG group.
+
+Two estimators:
+  * diagonal (default, CPU-friendly): [H^-1]_ii ~= 1 / H_ii  =>
+    s_i = w_i^2 * H_ii^2  (monotone-equivalent to Wanda's |w|*||x||).
+  * exact: damped Cholesky inverse of the full KxK Hessian (GPTQ-style);
+    feasible for the small-K models we calibrate on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class HessianStats:
+    """Accumulated calibration statistics for one linear layer."""
+    xtx: jnp.ndarray      # [K, K] sum of x x^T  (or None-like zeros if diag_only)
+    diag: jnp.ndarray     # [K]   sum of x_i^2
+    count: int            # number of rows (tokens) accumulated
+    diag_only: bool = False
+
+    @staticmethod
+    def init(k: int, diag_only: bool = False) -> "HessianStats":
+        xtx = jnp.zeros((1, 1), jnp.float32) if diag_only else jnp.zeros(
+            (k, k), jnp.float32)
+        return HessianStats(xtx=xtx, diag=jnp.zeros((k,), jnp.float32),
+                            count=0, diag_only=diag_only)
+
+    def update(self, x: jnp.ndarray) -> "HessianStats":
+        """x: [..., K] activations entering the layer."""
+        xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        diag = self.diag + jnp.sum(xf * xf, axis=0)
+        xtx = self.xtx if self.diag_only else self.xtx + xf.T @ xf
+        return HessianStats(xtx=xtx, diag=diag,
+                            count=self.count + xf.shape[0],
+                            diag_only=self.diag_only)
+
+
+def hessian_diag(stats: HessianStats, damp: float = 1e-2) -> jnp.ndarray:
+    """H_ii = 2/n * sum x_i^2, damped by mean."""
+    h = 2.0 * stats.diag / max(stats.count, 1)
+    return h + damp * jnp.mean(h)
+
+
+def inv_hessian_diag(stats: HessianStats, damp: float = 1e-2) -> jnp.ndarray:
+    """[H^-1]_ii. Exact (Cholesky) when full XtX available, else 1/H_ii."""
+    if stats.diag_only:
+        return 1.0 / hessian_diag(stats, damp)
+    h = 2.0 * stats.xtx / max(stats.count, 1)
+    h = h + damp * jnp.mean(jnp.diag(h)) * jnp.eye(h.shape[0], dtype=h.dtype)
+    hinv = jnp.linalg.inv(h)
+    return jnp.diag(hinv)
+
+
+def weight_saliency(w: jnp.ndarray, stats: HessianStats,
+                    damp: float = 1e-2, exact: bool = False) -> jnp.ndarray:
+    """Per-element saliency s_i = w_i^2 / [H^-1]_ii^2  (eq. 4). Shape of w.
+
+    w: [out, in]. The Hessian factor is shared across output rows.
+    """
+    if exact and not stats.diag_only:
+        hinv_ii = inv_hessian_diag(stats, damp)          # [K]
+        denom = jnp.maximum(hinv_ii * hinv_ii, 1e-20)
+        return (w.astype(jnp.float32) ** 2) / denom[None, :]
+    h_ii = hessian_diag(stats, damp)                     # [K]
+    return (w.astype(jnp.float32) ** 2) * (h_ii * h_ii)[None, :]
+
+
+def group_saliency(elem_saliency: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Average per-element saliency within each 1xG group.
+
+    [out, in] -> [out, in/G].
+    """
+    n, k = elem_saliency.shape
+    if k % group_size != 0:
+        raise ValueError(f"in dim {k} not divisible by group {group_size}")
+    return elem_saliency.reshape(n, k // group_size, group_size).mean(axis=-1)
+
+
+def collect_layer_stats(
+    apply_fn, params, batches, layer_taps: Dict[str, callable],
+    diag_only: bool = True,
+) -> Dict[str, HessianStats]:
+    """Run calibration batches through ``apply_fn`` capturing inputs of the
+    tapped layers.
+
+    ``layer_taps`` maps layer-name -> fn(params, batch) -> activations [.., K]
+    (each tap recomputes the prefix of the network up to that layer's input;
+    fine for the small calibration models this runs on).
+    """
+    stats: Dict[str, HessianStats] = {}
+    for name, tap in layer_taps.items():
+        k = None
+        for b in batches:
+            x = tap(params, b)
+            if k is None:
+                k = x.shape[-1]
+                stats[name] = HessianStats.init(k, diag_only=diag_only)
+            stats[name] = stats[name].update(x)
+    return stats
+
+
+def saliency_by_mode(w: jnp.ndarray, stats: Optional["HessianStats"],
+                     mode: str = "hessian", damp: float = 1e-2,
+                     exact: bool = False) -> jnp.ndarray:
+    """Dispatch: hessian (paper eq. 4) | wanda | magnitude."""
+    if mode == "magnitude" or stats is None:
+        return jnp.square(w.astype(jnp.float32))
+    if mode == "wanda":
+        h_ii = hessian_diag(stats, damp)
+        return jnp.abs(w.astype(jnp.float32)) * jnp.sqrt(h_ii)[None, :]
+    return weight_saliency(w, stats, damp=damp, exact=exact)

@@ -1,0 +1,118 @@
+"""Task-centric sparse-quantized GEMV — Pallas TPU kernel (paper §3.5).
+
+GPU original: Stream-K work-centric decomposition over CTAs, gathering
+surviving INT4 groups and their activation slices. TPU adaptation (see
+DESIGN.md §2): the grid is a *1-D flattened work list* of equal-size
+(row-block, group-chunk) items built offline at pack time. Scalar-prefetched
+work arrays drive every BlockSpec index map, so each sequential grid step
+DMAs exactly one [BN, BM] tile of BSR payload — equal work per step means a
+bubble-free software pipeline, which is the TPU analogue of Stream-K's SM
+load balancing. Output tiles are revisited by consecutive items of the same
+row block and accumulated in VMEM (`first` flag zero-initializes).
+
+Layouts (padded BSR, see core/bsr.py):
+    x      [B, K]          activations (B <= 8 per chip in decode)
+    idx    [N, M]  int32   kept group columns (sorted; -1 pad)
+    vals   [N, M, G/2] u8  packed INT4 codes
+    scale  [N, M]  f32     0 on padding => padded slots contribute nothing
+    zero   [N, M]  f32
+    y      [B, N]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_N = 128   # output rows per tile (lane dim)
+DEFAULT_BLOCK_M = 8     # group slots per work item
+
+
+def _kernel(row_block_ref, chunk_ref, first_ref,   # scalar prefetch
+            idx_ref, vals_ref, scale_ref, zero_ref, x_ref,  # VMEM in
+            y_ref,                                  # VMEM out (revisited)
+            *, group_size: int, batch: int):
+    w = pl.program_id(0)
+
+    @pl.when(first_ref[w] == 1)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    bn, bm, _ = vals_ref.shape
+    g = group_size
+
+    # --- dequantize the INT4 payload tile ---------------------------------
+    packed = vals_ref[...]                       # [BN, BM, G/2] uint8
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(bn, bm, g)
+    wt = (q - zero_ref[...][..., None]) * scale_ref[...][..., None]
+
+    # --- gather the matching activation groups ----------------------------
+    x = x_ref[...]                               # [B, K]
+    k = x.shape[-1]
+    xg = x.reshape(batch, k // g, g)
+    safe = jnp.maximum(idx_ref[...], 0).reshape(-1)          # [BN*BM]
+    # NOTE(tpu): 1-D take lowers to Mosaic dynamic-gather; the MXU-friendly
+    # fallback is a one-hot [BN*BM, K/G] matmul against xg.
+    xt = jnp.take(xg, safe, axis=1)              # [B, BN*BM, G]
+    xt = xt.reshape(batch, bn, bm, g)
+
+    # --- multiply-reduce on the VPU (decode is bandwidth-bound; no MXU) ---
+    acc = jnp.sum(wt[None, ...] * xt.astype(jnp.float32), axis=(2, 3))
+    y_ref[...] += acc.astype(y_ref.dtype)        # [B, BN]
+
+
+def gqsa_gemv_pallas(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    vals: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    work: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    *,
+    group_size: int,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Inputs must be pre-padded: N % block_n == 0, M % block_m == 0.
+
+    work = (row_block[W], chunk[W], first[W]) from core.bsr.build_work_list
+    (items sorted by row_block so output revisits are consecutive).
+    """
+    b, k = x.shape
+    n, m = idx.shape
+    row_block, chunk, first = work
+    n_items = row_block.shape[0]
+    g = group_size
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_items,),
+        in_specs=[
+            pl.BlockSpec((block_n, block_m),
+                         lambda w, rb, ch, fs: (rb[w], ch[w])),
+            pl.BlockSpec((block_n, block_m, g // 2),
+                         lambda w, rb, ch, fs: (rb[w], ch[w], 0)),
+            pl.BlockSpec((block_n, block_m),
+                         lambda w, rb, ch, fs: (rb[w], ch[w])),
+            pl.BlockSpec((block_n, block_m),
+                         lambda w, rb, ch, fs: (rb[w], ch[w])),
+            pl.BlockSpec((b, k), lambda w, rb, ch, fs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_n),
+                               lambda w, rb, ch, fs: (0, rb[w])),
+    )
+    kernel = functools.partial(_kernel, group_size=g, batch=b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(row_block, chunk, first, idx, vals, scale, zero, x)

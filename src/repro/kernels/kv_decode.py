@@ -1,0 +1,134 @@
+"""int8-KV decode attention — Pallas TPU kernel.
+
+The decode hot-spot behind EXPERIMENTS.md §Perf cell C: one query token
+attends over a 32k int8 KV cache. HBM traffic is the int8 payload (half of
+bf16); dequantization happens on 128-wide cache tiles in VMEM; softmax is
+the online (max, sum) accumulation across sequential S-blocks of the grid,
+carried in VMEM scratch.
+
+Layouts:
+    q        [B, KH, R, D]      query heads grouped by their KV head
+    k_cache  [B, S, KH, D] i8   (paper-layout cache, no transposes)
+    k_scale  [B, S, KH]  f32    per token x head
+    v_cache  [B, S, KH, D] i8
+    v_scale  [B, S, KH]  f32
+    out      [B, KH, R, D] f32
+
+Grid: (B, KH, S/BS) — S innermost so the (m, l, acc) scratch carries the
+online softmax across cache blocks of one (batch, kv-head) pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_S = 512
+
+
+def _kernel(len_ref,                                # scalar prefetch
+            q_ref, k_ref, ks_ref, v_ref, vs_ref,    # VMEM in
+            o_ref,                                  # VMEM out
+            m_ref, l_ref, acc_ref,                  # scratch
+            *, block_s: int):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [R, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    # dequantize this cache tile in VMEM (HBM traffic stays int8)
+    k_i8 = k_ref[0, :, 0, :]                         # [BS, D] int8
+    ks = ks_ref[0, :, 0]                             # [BS]
+    k = k_i8.astype(jnp.float32) * ks[:, None]
+    v_i8 = v_ref[0, :, 0, :]
+    vs = vs_ref[0, :, 0]
+    v = v_i8.astype(jnp.float32) * vs[:, None]
+
+    sco = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    pos = si * block_s + jnp.arange(block_s)
+    valid = pos < len_ref[0]
+    sco = jnp.where(valid[None, :], sco, -jnp.inf)   # [R, BS]
+
+    m_prev = m_ref[...]                              # [R, 1]... stored [R, 128]
+    m_old = m_prev[:, 0]
+    m_new = jnp.maximum(m_old, jnp.max(sco, axis=-1))
+    m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.exp(sco - m_safe[:, None])
+    p = jnp.where(jnp.isinf(sco), 0.0, p)
+    corr = jnp.exp(jnp.where(jnp.isinf(m_old), -jnp.inf, m_old) - m_safe)
+    corr = jnp.where(jnp.isinf(m_old), 0.0, corr)
+
+    l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+    acc_ref[...] = acc_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def kv_decode_attention_pallas(
+    q: jnp.ndarray,            # [B, KH, R, D]
+    k_cache: jnp.ndarray,      # [B, S, KH, D] int8
+    k_scale: jnp.ndarray,      # [B, S, KH] f32
+    v_cache: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    length: jnp.ndarray,       # [] int32 valid prefix
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, KH, R, D] f32. S % block_s == 0 (pad in ops wrapper)."""
+    b, khn, r, d = q.shape
+    s = k_cache.shape[1]
+    ns = s // block_s
+    grid = (b, khn, ns)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, r, d), lambda bi, ki, si, ln: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d),
+                         lambda bi, ki, si, ln: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1),
+                         lambda bi, ki, si, ln: (bi, si, ki)),
+            pl.BlockSpec((1, block_s, 1, d),
+                         lambda bi, ki, si, ln: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1),
+                         lambda bi, ki, si, ln: (bi, si, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, d),
+                               lambda bi, ki, si, ln: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((r, 128), jnp.float32),   # running max (lane-padded)
+            pltpu.VMEM((r, 128), jnp.float32),   # running denom
+            pltpu.VMEM((r, d), jnp.float32),     # unnormalized output
+        ],
+    )
+    length_arr = jnp.reshape(length, (1,)).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, khn, r, d), jnp.float32),
+        interpret=interpret,
+    )(length_arr, q, k_cache, k_scale, v_cache, v_scale)

@@ -1,0 +1,162 @@
+"""Public kernel entry points: padding, work-list plumbing, CPU fallback.
+
+``use_pallas`` selects the Pallas kernel (interpret=True off-TPU) vs the
+pure-jnp reference (the GSPMD/dry-run path — identical math).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BSRMatrix, build_work_list
+from repro.kernels import ref as kref
+from repro.kernels.gqsa_gemv import (gqsa_gemv_pallas, DEFAULT_BLOCK_N,
+                                     DEFAULT_BLOCK_M)
+from repro.kernels.w4_matmul import (w4_matmul_pallas, DEFAULT_BLOCK_T,
+                                     DEFAULT_BLOCK_K)
+from repro.kernels.w4_matmul import DEFAULT_BLOCK_N as W4_BLOCK_N
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def gqsa_gemv(
+    x: jnp.ndarray,
+    bsr: BSRMatrix,
+    *,
+    use_pallas: bool = True,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = x @ dense(bsr).T using the task-centric sparse kernel.
+
+    x: [B, K] (any B; padded to sublane multiple internally). Returns [B, N].
+    """
+    if not use_pallas:
+        return kref.gqsa_gemv_ref(x, bsr)
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    b, k = x.shape
+    n, m = bsr.idx.shape
+    bp = max(8, int(np.ceil(b / 8)) * 8)
+    xp = _pad_to(x, 0, bp - b + b if bp == b else bp)  # pad batch to bp
+    if xp.shape[0] != bp:
+        xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+
+    idx = _pad_to(_pad_to(bsr.idx, 0, block_n, value=-1), 1, block_m, value=-1)
+    vals = _pad_to(_pad_to(bsr.vals, 0, block_n), 1, block_m)
+    scale = _pad_to(_pad_to(bsr.scale, 0, block_n), 1, block_m)
+    zero = _pad_to(_pad_to(bsr.zero, 0, block_n), 1, block_m)
+
+    wl = build_work_list(idx, block_n, block_m)
+    y = gqsa_gemv_pallas(
+        xp, idx, vals, scale, zero,
+        (wl.row_block, wl.chunk, wl.first),
+        group_size=bsr.group_size, block_n=block_n, block_m=block_m,
+        interpret=interpret)
+    return y[:b, :n]
+
+
+def w4_matmul(
+    x: jnp.ndarray,
+    qw: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    *,
+    group_size: int,
+    use_pallas: bool = True,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_n: int = W4_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = x @ deq(qw).T (dense grouped-dequant). x: [T, K] -> [T, N]."""
+    if not use_pallas:
+        return kref.w4_matmul_ref(x, qw, scale, zero, group_size)
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    t, k = x.shape
+    n = qw.shape[0]
+    block_t = min(block_t, max(8, int(np.ceil(t / 8)) * 8))
+    block_k = min(block_k, k) if k % group_size == 0 else block_k
+    if block_k % group_size != 0 or k % block_k != 0:
+        # fall back: single K block (K is a multiple of G by construction)
+        block_k = k
+    xp = _pad_to(_pad_to(x, 0, block_t), 1, block_k)
+    qwp = _pad_to(_pad_to(qw, 0, block_n), 1, block_k // 2)
+    sp = _pad_to(_pad_to(scale, 0, block_n), 1, block_k // group_size)
+    zp = _pad_to(_pad_to(zero, 0, block_n), 1, block_k // group_size)
+    y = w4_matmul_pallas(xp, qwp, sp, zp, group_size=group_size,
+                         block_t=block_t, block_n=block_n, block_k=block_k,
+                         interpret=interpret)
+    return y[:t, :n]
+
+
+def gemv_bytes_model(bsr: BSRMatrix, batch: int = 1) -> dict:
+    """Static byte-traffic model for the roofline (per call, per chip):
+    everything the kernel DMAs from HBM once, at *deployed* widths
+    (paper/gguf convention: int16 group index, fp16 scale, u8 zero —
+    the padded in-memory form above uses wider dev-side types)."""
+    n, k = bsr.shape
+    m = bsr.idx.shape[1]
+    g = bsr.group_size
+    payload = n * m * (g * bsr.bits // 8 + 2 + 2 + 1)
+    x_bytes = batch * k * 2           # bf16 activations
+    y_bytes = batch * n * 4
+    flops = 2 * batch * n * m * g
+    return dict(weight_bytes=payload, act_bytes=x_bytes + y_bytes,
+                total_bytes=payload + x_bytes + y_bytes, flops=flops)
+
+
+def dense_bytes_model(n: int, k: int, batch: int = 1,
+                      bits: int = 16, group_size: int = 0) -> dict:
+    """Byte model for dense (fp16 / W4) GEMV for the fig6 comparison."""
+    wbytes = n * k * bits // 8
+    if group_size:
+        wbytes += n * (k // group_size) * 3  # fp16 scale + u8 zero
+    x_bytes = batch * k * 2
+    y_bytes = batch * n * 4
+    return dict(weight_bytes=wbytes, act_bytes=x_bytes + y_bytes,
+                total_bytes=wbytes + x_bytes + y_bytes,
+                flops=2 * batch * n * k)
+
+
+def kv_decode_attention(q, k_cache, k_scale, v_cache, v_scale, length, *,
+                        use_pallas: bool = True, block_s: int = 512,
+                        interpret: Optional[bool] = None):
+    """int8-KV decode attention. q: [B, KH, R, D] -> [B, KH, R, D] f32."""
+    from repro.kernels.kv_decode import kv_decode_attention_pallas
+    if not use_pallas:
+        return kref.kv_decode_attention_ref(q, k_cache, k_scale, v_cache,
+                                            v_scale, length)
+    if interpret is None:
+        interpret = not _on_tpu()
+    s = k_cache.shape[1]
+    block_s = min(block_s, s)
+    pad = (-s) % block_s
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+    return kv_decode_attention_pallas(q, k_cache, k_scale, v_cache, v_scale,
+                                      length, block_s=block_s,
+                                      interpret=interpret)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are also the *dry-run / GSPMD path*: identical math to the kernels,
+expressed as gather + einsum so XLA can shard them (N on the `model` axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bsr import BSRMatrix
+from repro.core.quant import unpack_int4
+
+
+def gqsa_gemv_ref(x: jnp.ndarray, bsr: BSRMatrix,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Sparse-quantized GEMV / skinny GEMM.
+
+    x: [B, K]  (B small in decode)
+    returns y: [B, N] with y[b,n] = sum_m deq(vals[n,m]) . x[b, idx[n,m]G:+G]
+    """
+    n, k = bsr.shape
+    g = bsr.group_size
+    b = x.shape[0]
+    q = unpack_int4(bsr.vals).astype(jnp.float32)              # [N, M, G]
+    w = (q - bsr.zero[..., None]) * bsr.scale[..., None]       # [N, M, G]
+    xg = x.reshape(b, k // g, g).astype(jnp.float32)           # [B, K/G, G]
+    safe = jnp.maximum(bsr.idx, 0)                              # [N, M]
+    # gather activation groups per (row, slot): [B, N, M, G]
+    xt = xg[:, safe, :]
+    y = jnp.einsum("bnmg,nmg->bn", xt, w)
+    return y.astype(dtype)
+
+
+def w4_matmul_ref(x: jnp.ndarray, qw: jnp.ndarray, scale: jnp.ndarray,
+                  zero: jnp.ndarray, group_size: int,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Dense grouped-dequant matmul (W4A16 baseline / prefill path).
+
+    x: [B, K]; qw: packed uint8 [N, K/2]; scale/zero: [N, K/G].
+    y = x @ deq(qw).T
+    """
+    n = qw.shape[0]
+    q = unpack_int4(qw).astype(jnp.float32)                    # [N, K]
+    k = q.shape[1]
+    qg = q.reshape(n, k // group_size, group_size)
+    w = (qg - zero[..., None]) * scale[..., None]
+    w = w.reshape(n, k)
+    return (x.astype(jnp.float32) @ w.T).astype(dtype)
+
+
+def kv_decode_attention_ref(q, k_cache, k_scale, v_cache, v_scale, length,
+                            dtype=jnp.float32):
+    """Oracle for the int8-KV decode attention kernel.
+
+    q: [B, KH, R, D]; k/v_cache: int8 [B, S, KH, D]; scales [B, S, KH].
+    """
+    b, s, khn, d = k_cache.shape
+    k = k_cache.astype(jnp.float32) * k_scale[..., None]
+    v = v_cache.astype(jnp.float32) * v_scale[..., None]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    sco = jnp.einsum("bkrd,bskd->bkrs", q.astype(jnp.float32), k) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)
+    o = jnp.einsum("bkrs,bskd->bkrd", p, v)
+    return o.astype(dtype)

@@ -1,0 +1,82 @@
+"""Grouped-dequant dense W4 matmul — Pallas TPU kernel.
+
+The quantization-only baseline (paper's W4A16 rows) and the prefill/training
+path for GQS layers: dequantize per-group INT4 tiles in VMEM and feed the MXU.
+
+    x      [T, K]         activations (T = tokens)
+    qw     [N, K/2] u8    packed INT4 codes (dense; pruned groups are zeros)
+    scale  [N, K/G] f32
+    zero   [N, K/G] f32
+    y      [T, N]
+
+Grid (T/BT, N/BN, K/BK): K innermost, accumulated in the revisited out tile.
+BK must be a multiple of the quant group size G so scale tiles align.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_T = 256
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _kernel(x_ref, qw_ref, scale_ref, zero_ref, y_ref, *, group_size: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    bn = qw_ref.shape[0]
+    packed = qw_ref[...]                              # [BN, BK/2]
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(bn, -1)  # [BN, BK]
+    bk = q.shape[1]
+    g = group_size
+    qg = q.reshape(bn, bk // g, g)
+    w = (qg - zero_ref[...][..., None]) * scale_ref[...][..., None]
+    w = w.reshape(bn, bk)                             # [BN, BK] f32
+
+    x = x_ref[...].astype(jnp.float32)                # [BT, BK]
+    y_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def w4_matmul_pallas(
+    x: jnp.ndarray,
+    qw: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    *,
+    group_size: int,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pre-padded: T%BT == 0, N%BN == 0, K%BK == 0, BK%G == 0."""
+    t, k = x.shape
+    n = qw.shape[0]
+    g = group_size
+    assert block_k % g == 0
+
+    grid = (t // block_t, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, group_size=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k // 2), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // g), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // g), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(x, qw, scale, zero)

@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract memory / cost / collective artifacts for the roofline.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and only the dry-run wants 512 host devices.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k \
+        --mesh single --out experiments/dryrun
+    python -m repro.launch.dryrun --all [--mesh both] [--jobs-file f.json]
+
+--all runs each cell in a fresh subprocess (XLA compile state does not
+accumulate; one bad cell cannot kill the sweep) and aggregates a summary.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import (get_config, input_specs, list_archs,
+                                    supported_shapes)
+from repro.core.gqs_layer import GQSAConfig
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (batch_shardings, build_prefill_step,
+                                build_serve_step, build_train_step,
+                                make_dist, serve_templates, train_templates)
+from repro.optim import adamw
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             gqsa_sparsity: float = 0.5, accum_steps: int = 0,
+             variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    import dataclasses
+    if "bf16p" in variant:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if "kv8" in variant:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    dist = make_dist(cfg, mesh, multi_pod, shape,
+                     sp_attention=("spattn" in variant))
+    if accum_steps == 0:
+        # baseline default: microbatch of ~4 sequences per data shard
+        # (1 per shard for FSDP giants — memory first, then hillclimb)
+        dp = 32 if multi_pod else 16
+        per = 1 if cfg.fsdp else 4
+        accum_steps = max(1, shape.global_batch // dp // per) \
+            if shape.kind == "train" else 1
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = build_train_step(cfg, dist, adamw.AdamWConfig(),
+                                    accum_steps=accum_steps)
+            p_sds, o_sds, b_sds, in_sh = train_templates(cfg, shape, dist)
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, b_sds)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg, dist)
+            p_sds, _, b_sds, (p_sh, _, b_sh) = train_templates(
+                cfg, shape, dist)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_sds, b_sds)
+        else:  # decode
+            gqsa = GQSAConfig()
+            if gqsa_sparsity != 0.5:
+                from repro.core.pruning import PruneConfig
+                gqsa = GQSAConfig(prune=PruneConfig(sparsity=gqsa_sparsity))
+            step = build_serve_step(cfg, dist)
+            p_sds, c_sds, t_sds, pos_sds, in_sh = serve_templates(
+                cfg, shape, dist, gqsa)
+            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+            lowered = jitted.lower(p_sds, c_sds, t_sds, pos_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = H.memory_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    coll = H.collective_bytes_from_hlo(hlo)
+    mf = H.model_flops_estimate(cfg, shape)
+    roof = H.roofline_terms(cost, coll, chips, model_flops=mf)
+
+    print(f"[dryrun] memory_analysis: {json.dumps(mem)}")
+    print(f"[dryrun] cost_analysis: flops/dev={cost.get('flops', 0):.3e} "
+          f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+    print(f"[dryrun] collectives/dev: {json.dumps(coll)}")
+
+    # component-wise analysis: exact FLOPs/bytes/collectives (scan bodies
+    # are undercounted by HloCostAnalysis — see component_analysis.py)
+    from repro.launch.component_analysis import analyze_cell
+    gqsa_obj = None
+    if shape.kind == "decode":
+        gqsa_obj = GQSAConfig()
+        if gqsa_sparsity != 0.5:
+            from repro.core.pruning import PruneConfig
+            gqsa_obj = GQSAConfig(prune=PruneConfig(sparsity=gqsa_sparsity))
+    try:
+        comp = analyze_cell(cfg, shape, mesh, multi_pod, gqsa=gqsa_obj,
+                            accum=accum_steps,
+                            sp_attention=("spattn" in variant))
+    except Exception as e:
+        comp = {"error": f"{type(e).__name__}: {e}"}
+    if "roofline" in comp:
+        print(f"[dryrun] component roofline: "
+              f"{json.dumps(comp['roofline'])}")
+
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": shape.kind,
+        "accum_steps": accum_steps,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem,
+        "collective_bytes": coll,
+        "roofline_wholeprog": roof.as_dict(),
+        "component_analysis": comp,
+        "roofline": comp.get("roofline", roof.as_dict()),
+        "status": "ok",
+    }
+
+
+def _cell_filename(arch, shape_name, mesh_tag, variant):
+    v = "" if variant == "baseline" else f"__{variant}"
+    return f"{arch}__{shape_name}__{mesh_tag}{v}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--accum-steps", type=int, default=0)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = 0
+        for arch in list_archs():
+            cfg = get_config(arch)
+            shapes = supported_shapes(cfg)
+            for shape_name in shapes:
+                for mesh_tag in (["16x16", "2x16x16"]
+                                 if args.mesh == "both" else
+                                 ["2x16x16" if args.mesh == "multi"
+                                  else "16x16"]):
+                    fn = out_dir / _cell_filename(arch, shape_name, mesh_tag,
+                                                  args.variant)
+                    if args.skip_existing and fn.exists():
+                        ok = json.loads(fn.read_text()).get("status") == "ok"
+                        if ok:
+                            print(f"skip {fn.name}")
+                            continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name,
+                           "--mesh",
+                           "multi" if mesh_tag == "2x16x16" else "single",
+                           "--out", str(out_dir),
+                           "--variant", args.variant]
+                    print(f"=== {arch} x {shape_name} x {mesh_tag} ===",
+                          flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures += 1
+        print(f"dry-run sweep complete, failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    multi = args.mesh == "multi"
+    mesh_tag = "2x16x16" if multi else "16x16"
+    fn = out_dir / _cell_filename(args.arch, args.shape, mesh_tag,
+                                  args.variant)
+    try:
+        rec = run_cell(args.arch, args.shape, multi,
+                       gqsa_sparsity=args.sparsity,
+                       accum_steps=args.accum_steps, variant=args.variant)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
+               "variant": args.variant, "status": "fail",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        fn.write_text(json.dumps(rec, indent=1))
+        print(rec["error"])
+        sys.exit(1)
+    fn.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {fn}")
+
+
+if __name__ == "__main__":
+    main()

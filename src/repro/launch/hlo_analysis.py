@@ -1,0 +1,148 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute    = HLO_FLOPs / (chips * peak_FLOPs)
+memory     = HLO_bytes / (chips * HBM_bw)
+collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from compiled.cost_analysis() (per-device SPMD program;
+multiplied back by `chips` to report whole-job HLO numbers per the spec).
+Collective bytes are parsed from the optimized HLO text: the operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async start/done pairs counted once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %fusion.1 = bf16[8,4096,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind (per-device program)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # skip the 'done' half of async pairs — the start carries the shape
+        if "-done(" in line or "-done." in line:
+            continue
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                hit = kind
+                break
+        if hit is None:
+            continue
+        # the result shape(s) sit between '=' and the op name
+        lhs = line.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        rhs = lhs[1]
+        opidx = rhs.find(hit)
+        shapes = _TUPLE_RE.findall(rhs[:opidx])
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        out[hit] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_total: float           # whole-job HLO flops (= per-dev x chips)
+    bytes_total: float
+    collective_bytes_per_dev: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], chips: int,
+                   model_flops: Optional[float] = None) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = None
+    if model_flops:
+        useful = model_flops / max(flops_dev * chips, 1.0)
+    return Roofline(
+        flops_total=flops_dev * chips, bytes_total=bytes_dev * chips,
+        collective_bytes_per_dev=coll_dev, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6*N*D train (N_active for MoE);
+    2*N_active per generated token for decode; 2*N_active*D for prefill."""
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not implement it
+        return {"error": str(e)}
+    if ma is None:
+        return {"error": "memory_analysis() returned None"}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,20 @@
+"""Production mesh construction (spec'd by the assignment).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and tests/benches
+must see 1 CPU device while the dry-run sees 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips/pod) single-pod, or 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,121 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+        [--write experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, list_archs, supported_shapes
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(dir_: Path, variant=None):
+    recs = {}
+    for f in sorted(dir_.glob("*.json")):
+        rec = json.loads(f.read_text())
+        v = rec.get("variant", "baseline")
+        if variant is not None and v != variant:
+            continue
+        key = (rec["arch"], rec["shape"], rec["mesh"], v)
+        recs[key] = rec
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    """§Dry-run: compile status + memory per cell (both meshes)."""
+    lines = ["| arch | shape | mesh | status | HBM/dev | args/dev | "
+             "compile | collective bytes/dev/step |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            runnable = shape in supported_shapes(cfg)
+            for mesh in ("16x16", "2x16x16"):
+                if not runnable:
+                    if mesh == "16x16":
+                        lines.append(f"| {arch} | {shape} | - | SKIP "
+                                     f"(full attention at 512k; DESIGN.md "
+                                     f"§6) | - | - | - | - |")
+                    continue
+                rec = recs.get((arch, shape, mesh, "baseline"))
+                if rec is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING "
+                                 f"| - | - | - | - |")
+                    continue
+                if rec["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | FAIL | - "
+                                 f"| - | - | - |")
+                    continue
+                mem = rec["memory_analysis"]
+                tot = mem.get("total_hbm_bytes")
+                args = mem.get("argument_size_in_bytes")
+                coll = rec["collective_bytes"]["total"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{fmt_b(tot) if tot else '-'} | "
+                    f"{fmt_b(args) if args else '-'} | "
+                    f"{rec['compile_s']:.0f}s | {fmt_b(coll)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    """§Roofline: three terms per (arch x shape), single-pod mesh."""
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "MODEL_FLOPS | useful ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in supported_shapes(cfg):
+            rec = recs.get((arch, shape, "16x16", "baseline"))
+            if rec is None or rec.get("status") != "ok" or \
+                    "roofline" not in rec:
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - |")
+                continue
+            r = rec["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+                f"{(r.get('useful_ratio') or 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--write", default=None)
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    out = ("## Dry-run\n\n" + dryrun_table(recs)
+           + "\n\n## Roofline (single-pod 16x16, baseline)\n\n"
+           + roofline_table(recs) + "\n")
+    if args.write:
+        Path(args.write).write_text(out)
+        print(f"wrote {args.write}")
+    else:
+        print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama2_7b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Production posture: sharded jit step (TP/FSDP/EP via dist rules) or
+--ddp [--grad-compress] shard_map data parallelism; async atomic
+checkpoints; straggler watchdog; retrying step wrapper; elastic restart —
+on relaunch it restores the latest checkpoint onto whatever mesh the
+surviving devices support (dist/elastic.py) and the deterministic data
+pipeline resumes from the step counter alone.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ShapeCfg
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_pipeline
+from repro.dist.elastic import build_mesh, plan_mesh
+from repro.dist.fault import StepWatchdog, TrainerHealth, retrying
+from repro.dist.sharding import param_shardings
+from repro.launch.steps import (batch_shardings, build_train_step,
+                                build_train_step_ddp, make_dist)
+from repro.models.registry import get_model
+from repro.optim import adamw
+from repro.optim.grad_compress import init_error_state
+from repro.optim.schedule import warmup_cosine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2_7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "bytes"])
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ddp", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    api = get_model(cfg)
+    n_dev = len(jax.devices())
+
+    mesh = None
+    if n_dev > 1:
+        plan = plan_mesh(n_dev, model_parallel=args.model_parallel)
+        mesh = build_mesh(plan)
+        print(f"mesh: {dict(zip(plan.axes, plan.shape))}")
+    dist = make_dist(cfg, mesh, multi_pod=False)
+
+    data = make_pipeline(args.data, cfg.vocab, args.seq, args.batch,
+                         seed=args.seed, path=args.data_path)
+    rng = jax.random.PRNGKey(args.seed)
+    params = api.init_params(rng, cfg)
+    opt_state = adamw.init_state(params)
+    err = init_error_state(params) if args.grad_compress else None
+    opt_cfg = adamw.AdamWConfig(lr=args.lr)
+    lr_fn = warmup_cosine(args.lr, args.warmup, args.steps)
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir)
+        latest = ckpt.latest_step()
+        if latest is not None:
+            shardings = None
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                p_sh = param_shardings(params, dist)
+                rep = NamedSharding(mesh, P())
+                shardings = {"params": p_sh,
+                             "opt": {"m": p_sh, "v": p_sh, "step": rep}}
+            state = ckpt.restore({"params": params, "opt": opt_state},
+                                 latest, shardings=shardings)
+            params, opt_state = state["params"], state["opt"]
+            start_step = latest
+            print(f"restored checkpoint at step {latest}")
+
+    if mesh is not None and not args.ddp:
+        p_sh = param_shardings(params, dist)
+        params = jax.device_put(params, p_sh)
+
+    if args.ddp:
+        step_fn = build_train_step_ddp(cfg, dist, opt_cfg, lr_fn,
+                                       compress=args.grad_compress)
+    else:
+        step_fn = build_train_step(cfg, dist, opt_cfg, lr_fn,
+                                   accum_steps=args.accum)
+    step_fn = retrying(jax.jit(step_fn, donate_argnums=(0, 1))
+                       if not args.ddp else step_fn)
+
+    watchdog = StepWatchdog()
+    health = TrainerHealth(watchdog)
+    metrics_log = []
+    t_train0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.host_batch(step).items()}
+        t0 = time.time()
+        if args.ddp:
+            params, opt_state, err, metrics = step_fn(params, opt_state,
+                                                      err or params, batch)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        watchdog.observe(dt)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            toks = args.batch * args.seq / dt
+            print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                  f"gnorm {metrics['grad_norm']:.2f} "
+                  f"lr {metrics['lr']:.2e} {dt*1e3:.0f}ms "
+                  f"({toks:.0f} tok/s) health={health.as_dict()}")
+            metrics_log.append(dict(metrics, step=step, dt=dt))
+        if ckpt and step > start_step and step % args.save_every == 0:
+            ckpt.save(step, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+        ckpt.wait()
+    print(f"done in {time.time()-t_train0:.1f}s; "
+          f"final loss {metrics_log[-1]['loss']:.4f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics_log, f)
+    return metrics_log
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Encoder-decoder backbone (Seamless-M4T-v2 style).
+
+The speech frontend is a stub per the assignment: ``frames`` arrive as
+precomputed [B, F, d_model] embeddings. Encoder = bidirectional attention +
+GELU FFN; decoder = causal self-attention + cross-attention + FFN. Decode
+caches self-attn KV plus the (computed-once) cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import apply_linear
+from repro.models import layers as L
+
+
+def _enc_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {"ln1": L.norm_init(cfg.d_model, dtype),
+            "attn": L.attn_init(ks[0], cfg, dtype),
+            "ln2": L.norm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                              dtype)}
+
+
+def _dec_layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {"ln1": L.norm_init(cfg.d_model, dtype),
+            "self_attn": L.attn_init(ks[0], cfg, dtype),
+            "ln2": L.norm_init(cfg.d_model, dtype),
+            "cross": L.attn_init(ks[1], cfg, dtype),
+            "ln3": L.norm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                              dtype)}
+
+
+def init_params(rng, cfg) -> Dict:
+    dtype = cfg.params_dtype
+    k_e, k_enc, k_dec, k_emb, k_head = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "enc_layers": jax.vmap(
+            lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": L.norm_init(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(
+            lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "final_norm": L.norm_init(cfg.d_model, dtype),
+        "lm_head": L.linear_init(k_head, cfg.vocab, cfg.d_model, dtype,
+                                 scale=0.02),
+    }
+
+
+def _cross_attend(p: Dict, x: jnp.ndarray, enc_k: jnp.ndarray,
+                  enc_v: jnp.ndarray, cfg, use_pallas) -> jnp.ndarray:
+    """x: [B, S, d]; enc_k/enc_v: [B, F, KH, D] (already projected)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = apply_linear(p["wq"], x, use_pallas=use_pallas).reshape(b, s, h, hd)
+    o = L.flash_attention(q, enc_k, enc_v, causal=False,
+                          block_q=cfg.attn_block_q,
+                          block_k=min(cfg.attn_block_k, enc_k.shape[1]),
+                          unroll=cfg.analysis_unroll)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas)
+
+
+def _cross_kv(p: Dict, enc_out: jnp.ndarray, cfg, use_pallas):
+    b, f, _ = enc_out.shape
+    khn, hd = cfg.n_kv_heads, cfg.hd
+    k = apply_linear(p["wk"], enc_out, use_pallas=use_pallas)
+    v = apply_linear(p["wv"], enc_out, use_pallas=use_pallas)
+    return k.reshape(b, f, khn, hd), v.reshape(b, f, khn, hd)
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg, dist=None,
+           use_pallas: bool = False) -> jnp.ndarray:
+    """frames: [B, F, d] (stub embeddings) -> encoder states [B, F, d]."""
+    h = frames.astype(cfg.compute_dtype)
+    b, f, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(f)[None, :], (b, f))
+
+    def body(hh, lp):
+        a = L.attention_block(lp["attn"],
+                              L.rmsnorm(hh, lp["ln1"], cfg.norm_eps),
+                              positions, cfg, causal=False,
+                              use_pallas=use_pallas)
+        hh = hh + a
+        m = L.mlp_block(lp["mlp"], L.rmsnorm(hh, lp["ln2"], cfg.norm_eps),
+                        cfg.mlp_type, use_pallas)
+        return hh + m, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Dict, tokens: jnp.ndarray, frames: jnp.ndarray, cfg,
+            dist=None, use_pallas: bool = False, last_only: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced training pass. Returns (logits [B, S, V], aux=0)."""
+    enc_out = encode(params, frames, cfg, dist, use_pallas)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if dist is not None:
+        h = dist.constrain(h, dist.batch_spec(3))
+
+    def body(hh, lp):
+        a = L.attention_block(lp["self_attn"],
+                              L.rmsnorm(hh, lp["ln1"], cfg.norm_eps),
+                              positions, cfg, use_pallas=use_pallas)
+        hh = hh + a
+        ek, ev = _cross_kv(lp["cross"], enc_out, cfg, use_pallas)
+        c = _cross_attend(lp["cross"],
+                          L.rmsnorm(hh, lp["ln2"], cfg.norm_eps),
+                          ek, ev, cfg, use_pallas)
+        hh = hh + c
+        m = L.mlp_block(lp["mlp"], L.rmsnorm(hh, lp["ln3"], cfg.norm_eps),
+                        cfg.mlp_type, use_pallas)
+        return hh + m, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    if last_only:
+        h = h[:, -1:, :]
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = apply_linear(params["lm_head"], h)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.compute_dtype
+    lyr, khn, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((lyr, batch, max_seq, khn, hd), dtype),
+        "v": jnp.zeros((lyr, batch, max_seq, khn, hd), dtype),
+        "cross_k": jnp.zeros((lyr, batch, cfg.n_frames, khn, hd), dtype),
+        "cross_v": jnp.zeros((lyr, batch, cfg.n_frames, khn, hd), dtype),
+    }
+
+
+def prime_cross_cache(params: Dict, frames: jnp.ndarray, cache: Dict, cfg,
+                      dist=None, use_pallas: bool = False) -> Dict:
+    """Run the encoder once and fill the cross K/V cache."""
+    enc_out = encode(params, frames, cfg, dist, use_pallas)
+
+    def body(_, lp):
+        ek, ev = _cross_kv(lp["cross"], enc_out, cfg, use_pallas)
+        return 0, (ek, ev)
+
+    _, (cks, cvs) = jax.lax.scan(body, 0, params["dec_layers"])
+    return dict(cache, cross_k=cks.astype(cache["cross_k"].dtype),
+                cross_v=cvs.astype(cache["cross_v"].dtype))
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    b = h.shape[0]
+
+    def body(hh, xs):
+        lp, lc = xs
+        hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        a, new_kv = L.attention_decode(lp["self_attn"], hn,
+                                       {"k": lc["k"], "v": lc["v"]},
+                                       pos, cfg, use_pallas)
+        hh = hh + a
+        hn = L.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        q = apply_linear(lp["cross"]["wq"], hn, use_pallas=use_pallas)
+        q = q.reshape(b, 1, cfg.n_heads, cfg.hd)
+        o = L.decode_attention(q, lc["cross_k"], lc["cross_v"],
+                               jnp.int32(cfg.n_frames))
+        c = apply_linear(lp["cross"]["wo"], o.reshape(b, 1, -1),
+                         use_pallas=use_pallas)
+        hh = hh + c
+        m = L.mlp_block(lp["mlp"], L.rmsnorm(hh, lp["ln3"], cfg.norm_eps),
+                        cfg.mlp_type, use_pallas)
+        new_lc = {"k": new_kv["k"], "v": new_kv["v"],
+                  "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+        return hh + m, new_lc
+
+    h, new_cache = jax.lax.scan(body, h, (params["dec_layers"], cache))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = apply_linear(params["lm_head"], h)
+    return logits, new_cache

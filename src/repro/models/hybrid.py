@@ -1,0 +1,184 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``shared_attn_every`` SSM layers (weights reused at every
+invocation, as in Zamba/Zamba2).
+
+Layer layout for n_layers=81, every=6: 13 groups of 6 mamba layers (outer
+scan), each followed by the shared attention+MLP block; 3 tail mamba layers.
+Decode keeps one KV cache per shared-block invocation (different network
+depths attend over different histories) and per-layer SSM/conv states.
+
+Long-context (500k) decode: when ``dist.seq_axis`` is set the shared-block
+KV caches are sequence-sharded over the data axis and attention runs the
+distributed flash-decoding combine (dist/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import apply_linear
+from repro.dist import collectives as C
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _n_groups(cfg) -> Tuple[int, int]:
+    every = cfg.shared_attn_every
+    return cfg.n_layers // every, cfg.n_layers % every
+
+
+def init_params(rng, cfg) -> Dict:
+    dtype = cfg.params_dtype
+    ng, rem = _n_groups(cfg)
+    every = cfg.shared_attn_every
+    k_emb, k_g, k_t, k_sh, k_head = jax.random.split(rng, 5)
+
+    gkeys = jax.random.split(k_g, ng * every).reshape(ng, every, 2)
+    grouped = jax.vmap(jax.vmap(lambda k: S.mamba_init(k, cfg, dtype)))(gkeys)
+    p = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "groups": grouped,
+        "shared": {
+            "ln1": L.norm_init(cfg.d_model, dtype),
+            "attn": L.attn_init(jax.random.fold_in(k_sh, 0), cfg, dtype),
+            "ln2": L.norm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(jax.random.fold_in(k_sh, 1), cfg.d_model,
+                              cfg.d_ff, cfg.mlp_type, dtype),
+        },
+        "final_norm": L.norm_init(cfg.d_model, dtype),
+        "lm_head": L.linear_init(k_head, cfg.vocab, cfg.d_model, dtype,
+                                 scale=0.02),
+    }
+    if rem:
+        tkeys = jax.random.split(k_t, rem).reshape(rem, 2)
+        p["tail"] = jax.vmap(lambda k: S.mamba_init(k, cfg, dtype))(tkeys)
+    return p
+
+
+def _shared_block(sp: Dict, h: jnp.ndarray, positions, cfg,
+                  use_pallas) -> jnp.ndarray:
+    a = L.attention_block(sp["attn"], L.rmsnorm(h, sp["ln1"], cfg.norm_eps),
+                          positions, cfg, use_pallas=use_pallas)
+    h = h + a
+    m = L.mlp_block(sp["mlp"], L.rmsnorm(h, sp["ln2"], cfg.norm_eps),
+                    cfg.mlp_type, use_pallas)
+    return h + m
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg, dist=None,
+            use_pallas: bool = False,
+            last_only: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if dist is not None:
+        h = dist.constrain(h, dist.batch_spec(3))
+    sp = params["shared"]
+
+    def group_body(hh, gp):
+        def inner(hh2, lp):
+            return hh2 + S.mamba_block(lp, hh2, cfg, use_pallas), None
+        hh, _ = jax.lax.scan(inner, hh, gp)
+        hh = _shared_block(sp, hh, positions, cfg, use_pallas)
+        if dist is not None:
+            hh = dist.constrain(hh, dist.batch_spec(3))
+        return hh, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(group_body, h, params["groups"])
+    if "tail" in params:
+        def inner(hh2, lp):
+            return hh2 + S.mamba_block(lp, hh2, cfg, use_pallas), None
+        h, _ = jax.lax.scan(inner, h, params["tail"])
+    if last_only:
+        h = h[:, -1:, :]
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = apply_linear(params["lm_head"], h)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.compute_dtype
+    ng, rem = _n_groups(cfg)
+    every = cfg.shared_attn_every
+    one = S.mamba_cache_init(cfg, batch, dtype)
+    stack = lambda tree, *dims: jax.tree_util.tree_map(
+        lambda l: jnp.zeros(dims + l.shape, l.dtype), tree)
+    cache = {
+        "groups": stack(one, ng, every),
+        "attn": {
+            "k": jnp.zeros((ng, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((ng, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+        },
+    }
+    if rem:
+        cache["tail"] = stack(one, rem)
+    return cache
+
+
+def _attn_decode_dist(sp, h, kv, pos, cfg, dist, use_pallas):
+    """Shared-block decode attention; distributed flash-decoding when the
+    KV cache is sequence-sharded (long-context, batch too small for DP)."""
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = L.attn_qkv(sp["attn"], h, positions, cfg, use_pallas)
+    if dist is not None and dist.seq_axis is not None:
+        k_cache = C.update_sharded_cache(kv["k"], k, pos, dist.mesh,
+                                         dist.seq_axis)
+        v_cache = C.update_sharded_cache(kv["v"], v, pos, dist.mesh,
+                                         dist.seq_axis)
+        o = C.sharded_decode_attention(q, k_cache, v_cache, pos + 1,
+                                       dist.mesh, dist.seq_axis)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            kv["k"], k.astype(kv["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            kv["v"], v.astype(kv["v"].dtype), (0, pos, 0, 0))
+        o = L.decode_attention(q, k_cache, v_cache, pos + 1)
+    y = apply_linear(sp["attn"]["wo"], o.reshape(b, 1, -1),
+                     use_pallas=use_pallas)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    sp = params["shared"]
+
+    def group_body(hh, xs):
+        gp, gc, kv = xs
+
+        def inner(hh2, xs2):
+            lp, lc = xs2
+            y, new_lc = S.mamba_decode(lp, hh2, lc, cfg, use_pallas)
+            return hh2 + y, new_lc
+
+        hh, new_gc = jax.lax.scan(inner, hh, (gp, gc))
+        hn = L.rmsnorm(hh, sp["ln1"], cfg.norm_eps)
+        a, new_kv = _attn_decode_dist(sp, hn, kv, pos, cfg, dist, use_pallas)
+        hh = hh + a
+        m = L.mlp_block(sp["mlp"], L.rmsnorm(hh, sp["ln2"], cfg.norm_eps),
+                        cfg.mlp_type, use_pallas)
+        return hh + m, (new_gc, new_kv)
+
+    h, (new_groups, new_attn) = jax.lax.scan(
+        group_body, h, (params["groups"], cache["groups"], cache["attn"]))
+    new_cache = {"groups": new_groups, "attn": new_attn}
+    if "tail" in params:
+        def inner(hh2, xs2):
+            lp, lc = xs2
+            y, new_lc = S.mamba_decode(lp, hh2, lc, cfg, use_pallas)
+            return hh2 + y, new_lc
+        h, new_tail = jax.lax.scan(inner, h, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = apply_linear(params["lm_head"], h)
+    return logits, new_cache

@@ -1,0 +1,502 @@
+"""Shared building blocks: norms, RoPE, attention (train flash + decode),
+MLPs. All linears route through core.gqs_layer.apply_linear so every block
+accepts FP, fake-quant, W4, or packed-GQSA parameters transparently.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gqs_layer import apply_linear
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def linear_init(rng, n_out: int, n_in: int, dtype=jnp.float32,
+                scale: Optional[float] = None) -> Dict:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(n_in))
+    w = jax.random.normal(rng, (n_out, n_in), dtype) * scale
+    return {"w": w}
+
+
+def norm_init(dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.ones((dim,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                            # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (training/prefill): exact-FLOP blocked causal flash.
+# Only lower-triangular (q-block, k-block) pairs are visited, so HLO FLOPs
+# match S^2/2 and peak memory is O(block_q * block_k) per step.
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: [B, KH, R, T, D]; k: [B, KH, S, D] -> [B, KH, R, T, S]."""
+    return jnp.einsum("bkrtd,bksd->bkrts", q, k)
+
+
+def _causal_pairs(nq: int, nk: int, block_q: int, block_k: int,
+                  causal: bool):
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if (not causal) or (j * block_k < (i + 1) * block_q)]
+    return (jnp.asarray([p[0] for p in pairs], jnp.int32),
+            jnp.asarray([p[1] for p in pairs], jnp.int32))
+
+
+def _block_mask(qi, kj, block_q, block_k, sk, causal, q_off=0):
+    kg = kj * block_k + jnp.arange(block_k)
+    kv_valid = kg < sk                                 # mask padded keys
+    if causal:
+        qg = (jnp.asarray(q_off, jnp.float32)
+              + qi * block_q + jnp.arange(block_q))
+        return (qg[:, None] >= kg[None, :].astype(jnp.float32)) \
+            & kv_valid[None, :]
+    return jnp.broadcast_to(kv_valid[None, :], (block_q, block_k))
+
+
+def _flash_fwd_impl(qb, kb, vb, q_off, causal, block_q, block_k, sk,
+                    unroll=False, full_pairs=False):
+    """qb: [B,KH,R,NQ,Tq,D]; kb/vb: [B,KH,NK,Tk,D*]. Returns (o, lse) with
+    o: [B,KH,R,NQ,Tq,Dv], lse: [B,KH,R,NQ,Tq] (+inf on fully-masked rows)."""
+    b, kh, r, nq, block_q_, d = qb.shape
+    nk = kb.shape[2]
+    dv = vb.shape[-1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    # sequence-parallel shards have a *traced* q offset: the causal pair
+    # set cannot be enumerated statically, so visit all pairs and let the
+    # mask cut (uniform SPMD program; ~2x attention FLOPs, traded for the
+    # removal of per-block resharding collectives — see EXPERIMENTS §Perf)
+    qi_arr, kj_arr = _causal_pairs(nq, nk, block_q, block_k,
+                                   causal and not full_pairs)
+
+    m0 = jnp.full((nq, b, kh, r, block_q), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, b, kh, r, block_q), jnp.float32)
+    o0 = jnp.zeros((nq, b, kh, r, block_q, dv), jnp.float32)
+
+    def body(carry, idx):
+        m, l, o = carry
+        qi, kj = idx
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, axis=2, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, axis=2, keepdims=False)
+        sco = _gqa_scores(qblk, kblk) * scale          # [B,KH,R,Tq,Tk]
+        mask = _block_mask(qi, kj, block_q, block_k, sk, causal, q_off)
+        sco = jnp.where(mask, sco, -jnp.inf)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, qi, 0, keepdims=False)
+        mnew = jnp.maximum(mi, jnp.max(sco, axis=-1))
+        msafe = jnp.where(jnp.isinf(mnew), 0.0, mnew)  # -inf rows guard
+        p = jnp.exp(sco - msafe[..., None])
+        p = jnp.where(jnp.isinf(sco), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isinf(mi), -jnp.inf, mi) - msafe)
+        corr = jnp.where(jnp.isinf(mi), 0.0, corr)
+        lnew = li * corr + jnp.sum(p, axis=-1)
+        onew = oi * corr[..., None] + jnp.einsum("bkrts,bksd->bkrtd", p, vblk)
+        m = jax.lax.dynamic_update_index_in_dim(m, mnew, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, lnew, qi, 0)
+        o = jax.lax.dynamic_update_index_in_dim(o, onew, qi, 0)
+        return (m, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (qi_arr, kj_arr),
+                                unroll=len(qi_arr) if unroll else 1)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    lse = jnp.where(l > 0, jnp.where(jnp.isinf(m), 0.0, m) + jnp.log(
+        jnp.maximum(l, 1e-30)), jnp.inf)
+    # -> [B,KH,R,NQ,Tq,(Dv)]
+    return (o.transpose(1, 2, 3, 0, 4, 5), lse.transpose(1, 2, 3, 0, 4))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash_core(qb, kb, vb, q_off, causal, block_q, block_k, sk,
+                unroll=False, full_pairs=False):
+    o, _ = _flash_fwd_impl(qb, kb, vb, q_off, causal, block_q, block_k, sk,
+                           unroll, full_pairs)
+    return o
+
+
+def _flash_core_fwd(qb, kb, vb, q_off, causal, block_q, block_k, sk,
+                    unroll=False, full_pairs=False):
+    o, lse = _flash_fwd_impl(qb, kb, vb, q_off, causal, block_q, block_k,
+                             sk, unroll, full_pairs)
+    return o, (qb, kb, vb, q_off, o, lse)
+
+
+def _flash_core_bwd(causal, block_q, block_k, sk, unroll, full_pairs,
+                    res, do):
+    """FlashAttention-style recompute backward: no per-step AD residuals."""
+    qb, kb, vb, q_off, o, lse = res
+    b, kh, r, nq, bq, d = qb.shape
+    nk = kb.shape[2]
+    dv = vb.shape[-1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qi_arr, kj_arr = _causal_pairs(nq, nk, block_q, block_k,
+                                   causal and not full_pairs)
+    delta = jnp.sum(do * o, axis=-1)                   # [B,KH,R,NQ,Tq]
+
+    dq0 = jnp.zeros_like(qb)
+    dk0 = jnp.zeros((b, kh, nk, block_k, d), jnp.float32)
+    dv0 = jnp.zeros((b, kh, nk, block_k, dv), jnp.float32)
+
+    def body(carry, idx):
+        dq, dk, dvv = carry
+        qi, kj = idx
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, axis=2, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, axis=2, keepdims=False)
+        do_i = jax.lax.dynamic_index_in_dim(do, qi, axis=3, keepdims=False)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, qi, axis=3, keepdims=False)
+        dl_i = jax.lax.dynamic_index_in_dim(delta, qi, axis=3, keepdims=False)
+        sco = _gqa_scores(qblk, kblk) * scale
+        mask = _block_mask(qi, kj, block_q, block_k, sk, causal, q_off)
+        lse_safe = jnp.where(jnp.isinf(lse_i), 0.0, lse_i)
+        p = jnp.exp(sco - lse_safe[..., None])
+        p = jnp.where(mask & ~jnp.isinf(lse_i)[..., None], p, 0.0)
+        # dv_j += p^T do_i ; dp = do_i v_j^T ; ds = p (dp - delta_i) scale
+        dv_j = jnp.einsum("bkrts,bkrtd->bksd", p, do_i)
+        dp = jnp.einsum("bkrtd,bksd->bkrts", do_i, vblk)
+        ds = p * (dp - dl_i[..., None]) * scale
+        dq_i = jnp.einsum("bkrts,bksd->bkrtd", ds, kblk)
+        dk_j = jnp.einsum("bkrts,bkrtd->bksd", ds, qblk)
+        old_q = jax.lax.dynamic_index_in_dim(dq, qi, axis=3, keepdims=False)
+        dq = jax.lax.dynamic_update_index_in_dim(dq, old_q + dq_i, qi, 3)
+        old_k = jax.lax.dynamic_index_in_dim(dk, kj, axis=2, keepdims=False)
+        dk = jax.lax.dynamic_update_index_in_dim(dk, old_k + dk_j, kj, 2)
+        old_v = jax.lax.dynamic_index_in_dim(dvv, kj, axis=2, keepdims=False)
+        dvv = jax.lax.dynamic_update_index_in_dim(dvv, old_v + dv_j, kj, 2)
+        return (dq, dk, dvv), None
+
+    (dq, dk, dvv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                    (qi_arr, kj_arr),
+                                    unroll=len(qi_arr) if unroll else 1)
+    return dq, dk, dvv, jnp.zeros((), jnp.float32)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, unroll: bool = False,
+                    q_offset=0) -> jnp.ndarray:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KH, D(v)]; H % KH == 0.
+    Returns [B, Sq, H, Dv].
+
+    Blocked online-softmax over statically enumerated causal block pairs
+    (exact FLOPs — upper-triangular blocks are never visited) with a
+    FlashAttention-style custom VJP (recompute backward; O(block^2) AD
+    memory instead of O(steps x S x D) scan residuals).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kh = k.shape[2]
+    dv = v.shape[-1]
+    r = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    s, skp = sq + pq, sk + pk
+    nq, nk = s // block_q, skp // block_k
+
+    qh = q.reshape(b, s, kh, r, d).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    qb = qh.reshape(b, kh, r, nq, block_q, d)
+    kb = k.transpose(0, 2, 1, 3).astype(jnp.float32).reshape(
+        b, kh, nk, block_k, d)
+    vb = v.transpose(0, 2, 1, 3).astype(jnp.float32).reshape(
+        b, kh, nk, block_k, dv)
+
+    static_off = isinstance(q_offset, (int, np.integer))
+    q_off = jnp.asarray(q_offset, jnp.float32)
+    o = _flash_core(qb, kb, vb, q_off, causal, block_q, block_k, sk,
+                    unroll, full_pairs=not static_off)
+    # [B,KH,R,NQ,Tq,Dv] -> [B, S, H, Dv]
+    o = o.transpose(0, 3, 4, 1, 2, 5).reshape(b, s, h, dv)
+    return o[:, :sq].astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """[B, 1, KH, D] -> (int8 codes, f32 scale [B, 1, KH]) per token+head."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                       1e-6)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
+                          k_scale: jnp.ndarray, v_cache: jnp.ndarray,
+                          v_scale: jnp.ndarray,
+                          length: jnp.ndarray) -> jnp.ndarray:
+    """int8 KV-cache attention (beyond-paper GQSA extension: at 32k-context
+    decode the cache, not the weights, dominates HBM traffic).
+
+    q: [B, 1, H, D]; k/v_cache: int8 [B, S, KH, D]; scales: f32 [B, S, KH].
+    q is quantized per-head to int8 so the score contraction is an
+    int8 x int8 -> int32 dot (half the cache read bytes of bf16); the
+    softmax weights are likewise quantized so p @ v runs int8 x int8.
+    """
+    b, s, khn, d = k_cache.shape
+    h = q.shape[2]
+    r = h // khn
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qh = q.reshape(b, khn, r, d)
+    q_i8, q_sc = quantize_kv(qh.reshape(b, 1, khn * r, d))
+    q_i8 = q_i8.reshape(b, khn, r, d)
+    q_sc = q_sc.reshape(b, khn, r)
+    sco_i = jnp.einsum("bkrd,bskd->bkrs", q_i8, k_cache,
+                       preferred_element_type=jnp.int32)
+    sco = (sco_i.astype(jnp.float32)
+           * q_sc[..., None] * k_scale.transpose(0, 2, 1)[:, :, None, :]
+           * scale)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                        # [B,KH,R,S]
+    # fold the per-position value scale into p, then quantize p to int8
+    p_scaled = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    p_amax = jnp.maximum(jnp.max(p_scaled, axis=-1), 1e-9)
+    p_i8 = jnp.clip(jnp.round(p_scaled / p_amax[..., None] * 127.0),
+                    -127, 127).astype(jnp.int8)
+    o_i = jnp.einsum("bkrs,bskd->bkrd", p_i8, v_cache,
+                     preferred_element_type=jnp.int32)
+    o = o_i.astype(jnp.float32) * (p_amax[..., None] / 127.0)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+    """Single-step attention against a cache.
+
+    q: [B, 1, H, D]; caches: [B, S, KH, D]; length: [] or [B] valid prefix.
+    """
+    b, s, khn, d = k_cache.shape
+    dv = v_cache.shape[-1]
+    h = q.shape[2]
+    r = h // khn
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    # keep caches in their storage dtype AND layout: no f32 copy, no
+    # transpose of the whole KV history — contract in cache layout and
+    # accumulate in f32 via the dot itself
+    qh = q.reshape(b, khn, r, d).astype(k_cache.dtype)
+    sco = jnp.einsum("bkrd,bskd->bkrs", qh, k_cache,
+                     preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,S]
+    o = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg, dtype=jnp.float32) -> Dict:
+    d, h, khn, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {"wq": linear_init(ks[0], h * hd, d, dtype),
+         "wk": linear_init(ks[1], khn * hd, d, dtype),
+         "wv": linear_init(ks[2], khn * hd, d, dtype),
+         "wo": linear_init(ks[3], d, h * hd, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, dtype)
+        p["k_norm"] = norm_init(hd, dtype)
+    return p
+
+
+def attn_qkv(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, cfg,
+             use_pallas=False):
+    b, s, d = x.shape
+    h, khn, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = apply_linear(p["wq"], x, use_pallas=use_pallas).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], x, use_pallas=use_pallas).reshape(b, s, khn, hd)
+    v = apply_linear(p["wv"], x, use_pallas=use_pallas).reshape(b, s, khn, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, cfg,
+                    *, causal: bool = True, use_pallas=False,
+                    dist=None) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    if dist is not None and getattr(dist, "sp_attention", False) \
+            and dist.mesh is not None \
+            and x.shape[1] % dist.axis_size(dist.model_axis) == 0:
+        return attention_block_sp(p, x, cfg, causal=causal,
+                                  use_pallas=use_pallas, dist=dist)
+    b, s, d = x.shape
+    q, k, v = attn_qkv(p, x, positions, cfg, use_pallas)
+    o = flash_attention(q, k, v, causal=causal,
+                        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+                        unroll=cfg.analysis_unroll)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas)
+
+
+def attention_block_sp(p: Dict, x: jnp.ndarray, cfg, *, causal=True,
+                       use_pallas=False, dist=None) -> jnp.ndarray:
+    """Sequence-parallel attention (shard_map over the model axis).
+
+    Queries are sequence-sharded over `model`; the (small, GQA) K/V are
+    all-gathered per shard. Head-count alignment with the TP degree becomes
+    irrelevant — this removes the per-block resharding collectives GSPMD
+    inserts when heads % tp != 0 (yi-34b: 56 heads, kv=8 on 16-way TP).
+    Causality across shards is handled by a traced q_offset in the flash
+    mask (uniform SPMD program; ~2x attention FLOPs upper bound).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    maxis = dist.model_axis
+    nsh = dist.axis_size(maxis)
+    s_loc = s // nsh
+    dp = dist.batch_axes
+
+    def local(xl, pp):
+        i = jax.lax.axis_index(maxis)
+        offset = (i * s_loc).astype(jnp.float32)
+        positions = (offset + jnp.arange(s_loc)[None, :]
+                     ).astype(jnp.float32) * jnp.ones((xl.shape[0], 1))
+        q, k_loc, v_loc = attn_qkv(pp, xl, positions, cfg, use_pallas)
+        k = jax.lax.all_gather(k_loc, maxis, axis=1, tiled=True)
+        v = jax.lax.all_gather(v_loc, maxis, axis=1, tiled=True)
+        o = flash_attention(q, k, v, causal=causal,
+                            block_q=min(cfg.attn_block_q, s_loc),
+                            block_k=cfg.attn_block_k,
+                            unroll=cfg.analysis_unroll, q_offset=offset)
+        yl = apply_linear(pp["wo"], o.reshape(xl.shape[0], s_loc, -1),
+                          use_pallas=use_pallas)
+        return yl
+
+    pspec = jax.tree_util.tree_map(
+        lambda l: P(*([None] * l.ndim)), p)
+    return shard_map(local, mesh=dist.mesh,
+                     in_specs=(P(dp, maxis, None), pspec),
+                     out_specs=P(dp, maxis, None),
+                     check_rep=False)(x, p)
+
+
+def attention_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
+                     cfg, use_pallas=False) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B, 1, d]; cache: {k: [B, S, KH, D], v: ...} (+k_scale/v_scale for
+    the int8 cache); pos: [] step index."""
+    b = x.shape[0]
+    h, khn, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = attn_qkv(p, x, positions, cfg, use_pallas)
+    if "k_scale" in cache:   # int8 KV cache
+        k_i8, k_sc = quantize_kv(k)
+        v_i8, v_sc = quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_i8,
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_i8,
+                                               (0, pos, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(cache["k_scale"], k_sc,
+                                               (0, pos, 0))
+        v_scale = jax.lax.dynamic_update_slice(cache["v_scale"], v_sc,
+                                               (0, pos, 0))
+        if use_pallas:
+            from repro.kernels import ops as kops
+            r = h // khn
+            o = kops.kv_decode_attention(
+                q.reshape(b, khn, r, hd), k_cache, k_scale,
+                v_cache, v_scale, pos + 1)
+            o = o.reshape(b, 1, h, hd).astype(x.dtype)
+        else:
+            o = decode_attention_int8(q, k_cache, k_scale, v_cache,
+                                      v_scale, pos + 1)
+        y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
+        return y, {"k": k_cache, "v": v_cache, "k_scale": k_scale,
+                   "v_scale": v_scale}
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d: int, d_ff: int, mlp_type: str, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(rng, 3)
+    if mlp_type == "swiglu":
+        return {"wg": linear_init(ks[0], d_ff, d, dtype),
+                "wu": linear_init(ks[1], d_ff, d, dtype),
+                "wd": linear_init(ks[2], d, d_ff, dtype)}
+    return {"wu": linear_init(ks[0], d_ff, d, dtype),
+            "wd": linear_init(ks[1], d, d_ff, dtype)}
+
+
+def mlp_block(p: Dict, x: jnp.ndarray, mlp_type: str,
+              use_pallas=False) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        g = apply_linear(p["wg"], x, use_pallas=use_pallas)
+        u = apply_linear(p["wu"], x, use_pallas=use_pallas)
+        return apply_linear(p["wd"], jax.nn.silu(g) * u,
+                            use_pallas=use_pallas)
+    u = apply_linear(p["wu"], x, use_pallas=use_pallas)
+    return apply_linear(p["wd"], jax.nn.gelu(u), use_pallas=use_pallas)

@@ -1,0 +1,102 @@
+"""Family dispatch: one API over all architectures.
+
+    api = get_model(cfg)
+    params = api.init_params(rng, cfg)
+    logits, aux = api.forward(params, batch, cfg, dist)       # train/prefill
+    cache = api.init_cache(cfg, batch_size, max_seq)
+    logits, cache = api.decode_step(params, cache, tok, pos, cfg, dist)
+
+``batch`` is a dict: tokens (all), labels (train), patch_embeds (vlm),
+frames (encdec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    forward: Callable        # (params, batch, cfg, dist, use_pallas)
+    init_cache: Callable     # (cfg, batch_size, max_seq, dtype)
+    decode_step: Callable    # (params, cache, tokens, pos, cfg, dist, ...)
+    prime_cache: Optional[Callable] = None   # encdec cross-KV fill
+
+
+def _tf_forward(params, batch, cfg, dist=None, use_pallas=False,
+                last_only=False):
+    return transformer.forward(params, batch["tokens"], cfg, dist,
+                               use_pallas,
+                               patch_embeds=batch.get("patch_embeds"),
+                               last_only=last_only)
+
+
+def _encdec_forward(params, batch, cfg, dist=None, use_pallas=False,
+                    last_only=False):
+    return encdec.forward(params, batch["tokens"], batch["frames"], cfg,
+                          dist, use_pallas, last_only=last_only)
+
+
+def _hybrid_forward(params, batch, cfg, dist=None, use_pallas=False,
+                    last_only=False):
+    return hybrid.forward(params, batch["tokens"], cfg, dist, use_pallas,
+                          last_only=last_only)
+
+
+def _ssm_forward(params, batch, cfg, dist=None, use_pallas=False,
+                 last_only=False):
+    return ssm_lm.forward(params, batch["tokens"], cfg, dist, use_pallas,
+                          last_only=last_only)
+
+
+_FAMILIES: Dict[str, ModelAPI] = {
+    "dense": ModelAPI(transformer.init_params, _tf_forward,
+                      transformer.init_cache, transformer.decode_step),
+    "moe": ModelAPI(transformer.init_params, _tf_forward,
+                    transformer.init_cache, transformer.decode_step),
+    "mla_moe": ModelAPI(transformer.init_params, _tf_forward,
+                        transformer.init_cache, transformer.decode_step),
+    "vlm": ModelAPI(transformer.init_params, _tf_forward,
+                    transformer.init_cache, transformer.decode_step),
+    "encdec": ModelAPI(encdec.init_params, _encdec_forward,
+                       encdec.init_cache, encdec.decode_step,
+                       prime_cache=encdec.prime_cross_cache),
+    "hybrid": ModelAPI(hybrid.init_params, _hybrid_forward,
+                       hybrid.init_cache, hybrid.decode_step),
+    "ssm": ModelAPI(ssm_lm.init_params, _ssm_forward,
+                    ssm_lm.init_cache, ssm_lm.decode_step),
+}
+
+
+def get_model(cfg) -> ModelAPI:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}; "
+                         f"known: {sorted(_FAMILIES)}")
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Next-token CE. logits [B, S, V] (may be longer than labels when a
+    modality prefix was prepended — align to the tail); labels [B, S]."""
+    s = labels.shape[1]
+    logits = logits[:, -s:, :].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    # vocab-parallel-safe gold gather: masked reduction over the (possibly
+    # model-sharded) vocab dim instead of take_along_axis (which would
+    # all-gather the logits under GSPMD).
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,230 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear recurrence across chunks). Decode uses the O(1)-per-step recurrent
+state update. The in/out projections are GQS-compressible linears; the conv
+and SSD scan themselves carry no GEMV weight traffic (noted inapplicability
+in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import apply_linear
+from repro.models.layers import linear_init, norm_init, rmsnorm
+
+
+def _ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def mamba_init(rng, cfg, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_ch = _ssm_dims(cfg)
+    ks = jax.random.split(rng, 5)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": linear_init(ks[0], in_dim, d, dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_ch, s.conv_width),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm": norm_init(d_inner, dtype),
+        "out_proj": linear_init(ks[4], d, d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds. x: [B, S, C]; w: [C, W]."""
+    width = w.shape[1]
+    w = w.astype(x.dtype)
+    out = x * w[None, None, :, -1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :]
+        shifted = shifted[:, :x.shape[1], :]
+        out = out + shifted * w[None, None, :, -1 - i]
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., L] -> [..., L, L]; out[i,j] = sum_{k in (j, i]} x[k] for
+    i >= j, else -inf."""
+    c = jnp.cumsum(x, axis=-1)
+    d = c[..., :, None] - c[..., None, :]
+    ll = x.shape[-1]
+    mask = jnp.tril(jnp.ones((ll, ll), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int,
+                initial_state=None, unroll: bool = False):
+    """Chunked SSD (port of mamba2's ssd_minimal_discrete, group-aware).
+
+    x: [B, S, H, P]; dt: [B, S, H] (>0); a: [H] (<0); bmat/cmat: [B, S, G, N].
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    nc = s // chunk
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    da = (dt * a[None, None, :]).astype(jnp.float32)        # [B, S, H]
+
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dac = da.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # [B, H, NC, L]
+    bh = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3) \
+        if rep > 1 else bmat.reshape(b, nc, chunk, g, n)
+    ch = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3) \
+        if rep > 1 else cmat.reshape(b, nc, chunk, g, n)
+    bh = bh.astype(jnp.float32)
+    ch = ch.astype(jnp.float32)
+
+    # 1. intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(dac))                             # [B,H,NC,L,L]
+    lmat = jnp.where(jnp.isfinite(lmat), lmat, 0.0)
+    scores = jnp.einsum("bclhn,bcshn->bhcls", ch, bh)
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", scores * lmat, xc)
+
+    # 2. per-chunk states
+    a_cs = jnp.cumsum(dac, axis=-1)                          # [B,H,NC,L]
+    a_tot = a_cs[..., -1]                                    # [B,H,NC]
+    decay_states = jnp.exp(a_tot[..., None] - a_cs)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bh, decay_states, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st_c, atot_c = inp                                   # [B,H,P,N],[B,H]
+        prev = carry
+        new = st_c + jnp.exp(atot_c)[..., None, None] * prev
+        return new, prev                                     # emit incoming
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(2, 0, 1)),
+        unroll=nc if unroll else 1)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [B,NC,H,P,N]
+
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(a_cs)                              # [B,H,NC,L]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", ch, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, a, bmat, cmat):
+    """One recurrent step. state: [B,H,P,N]; x: [B,H,P]; dt: [B,H];
+    bmat/cmat: [B,G,N]. Returns (y [B,H,P], new_state)."""
+    b, h, p, n = state.shape
+    g = bmat.shape[1]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=1) if rep > 1 else bmat   # [B,H,N]
+    chh = jnp.repeat(cmat, rep, axis=1) if rep > 1 else cmat
+    da = jnp.exp(dt * a[None, :]).astype(jnp.float32)         # [B,H]
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    new_state = state * da[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xdt, bh.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", chh.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn,
+                 2 * d_inner + 2 * gn], axis=-1)
+    return z, xs, bmat, cmat, dt
+
+
+def mamba_block(p: Dict, x: jnp.ndarray, cfg,
+                use_pallas: bool = False) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x: [B, S, d] -> [B, S, d]."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner, n_heads, conv_ch = _ssm_dims(cfg)
+
+    zxbcdt = apply_linear(p["in_proj"], x, use_pallas=use_pallas)
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)     # [B,S,conv_ch]
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = jnp.split(conv_out,
+                               [d_inner, d_inner + s_cfg.n_groups *
+                                s_cfg.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # [B,S,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H]
+    xh = xs.reshape(b, s, n_heads, s_cfg.head_dim)
+    bm = bmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    cm = cmat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+
+    chunk = min(s_cfg.chunk, s)
+    y, _ = ssd_chunked(xh, dt, a, bm, cm, chunk,
+                       unroll=cfg.analysis_unroll)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return apply_linear(p["out_proj"], y, use_pallas=use_pallas)
+
+
+def mamba_cache_init(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.d_state),
+                           jnp.float32),
+    }
+
+
+def mamba_decode(p: Dict, x: jnp.ndarray, cache: Dict, cfg,
+                 use_pallas: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: [B, 1, d]."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    d_inner, n_heads, conv_ch = _ssm_dims(cfg)
+
+    zxbcdt = apply_linear(p["in_proj"], x[:, 0], use_pallas=use_pallas)
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)     # [B, conv_ch]
+    window = jnp.concatenate([cache["conv"],
+                              conv_in[:, None, :]], axis=1)  # [B, W, C]
+    conv_out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out,
+                               [d_inner, d_inner + s_cfg.n_groups *
+                                s_cfg.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, n_heads, s_cfg.head_dim)
+    bm = bmat.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    cm = cmat.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+
+    y, new_state = ssd_decode_step(cache["state"], xh, dt, a, bm, cm)
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = apply_linear(p["out_proj"], y, use_pallas=use_pallas)
+    new_cache = {"conv": window[:, 1:], "state": new_state}
+    return y[:, None, :], new_cache

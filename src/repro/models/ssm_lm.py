@@ -1,0 +1,82 @@
+"""Pure Mamba2 LM (mamba2-130m): stacked SSM blocks, no attention."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import apply_linear
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def init_params(rng, cfg) -> Dict:
+    dtype = cfg.params_dtype
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+
+    def one(k):
+        kk = jax.random.split(k, 2)
+        return {"ln": L.norm_init(cfg.d_model, dtype),
+                "mamba": S.mamba_init(kk[0], cfg, dtype)}
+
+    p = {"embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                    dtype) * 0.02,
+         "layers": jax.vmap(one)(lkeys),
+         "final_norm": L.norm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.linear_init(k_head, cfg.vocab, cfg.d_model, dtype,
+                                     scale=0.02)
+    return p
+
+
+def _unembed(params, h, cfg):
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    return apply_linear(params["lm_head"], h)
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg, dist=None,
+            use_pallas: bool = False,
+            last_only: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if dist is not None:
+        h = dist.constrain(h, dist.batch_spec(3))
+
+    def body(hh, lp):
+        hn = L.rmsnorm(hh, lp["ln"], cfg.norm_eps)
+        return hh + S.mamba_block(lp["mamba"], hn, cfg, use_pallas), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    if last_only:
+        h = h[:, -1:, :]
+    return _unembed(params, h, cfg), jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
+    # SSM state is O(1) in sequence length: max_seq is irrelevant (that IS
+    # the long-context win), kept in the signature for API uniformity.
+    dtype = dtype or cfg.compute_dtype
+    one = S.mamba_cache_init(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros((cfg.n_layers,) + l.shape, l.dtype), one)
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+
+    def body(hh, xs):
+        lp, lc = xs
+        hn = L.rmsnorm(hh, lp["ln"], cfg.norm_eps)
+        y, new_lc = S.mamba_decode(lp["mamba"], hn, lc, cfg, use_pallas)
+        return hh + y, new_lc
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    return _unembed(params, h, cfg), new_cache

@@ -1,0 +1,188 @@
+"""Decoder-only LM: dense / MoE / MLA-MoE / VLM families.
+
+Layers are weight-stacked and iterated with lax.scan (small HLO, fast
+compiles at 60+ layers); the per-layer body is remat'd when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gqs_layer import apply_linear
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": L.norm_init(cfg.d_model, dtype),
+         "ln2": L.norm_init(cfg.d_model, dtype)}
+    if cfg.family == "mla_moe":
+        p["attn"] = MLA.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.attn_init(ks[0], cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                              dtype)
+    return p
+
+
+def init_params(rng, cfg) -> Dict:
+    dtype = cfg.params_dtype
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys),
+        "final_norm": L.norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(k_head, cfg.vocab, cfg.d_model,
+                                          dtype, scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block(lp: Dict, h: jnp.ndarray, positions: jnp.ndarray, cfg, dist,
+           use_pallas) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.family == "mla_moe":
+        a = MLA.mla_block(lp["attn"], L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                          positions, cfg, use_pallas)
+    else:
+        a = L.attention_block(lp["attn"],
+                              L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                              positions, cfg, use_pallas=use_pallas,
+                              dist=dist)
+    h = h + a
+    hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = MOE.moe_block(lp["moe"], hn, cfg, dist, use_pallas)
+    else:
+        m, aux = L.mlp_block(lp["mlp"], hn, cfg.mlp_type, use_pallas), 0.0
+    return h + m, jnp.asarray(aux, jnp.float32)
+
+
+def embed_tokens(params: Dict, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def unembed(params: Dict, h: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h,
+                          params["embed"].astype(h.dtype))
+    return apply_linear(params["lm_head"], h)
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg, dist=None,
+            use_pallas: bool = False,
+            patch_embeds: Optional[jnp.ndarray] = None,
+            last_only: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: [B, S_text]. Returns (logits [B, S, V], aux loss scalar).
+
+    VLM: ``patch_embeds`` [B, P, d] are prepended to the token embeddings
+    (the assignment's modality-frontend stub); S = P + S_text.
+    """
+    h = embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    # sequence-parallel residual stream (Megatron-SP): keep h sharded on
+    # (batch, seq@model); per-token ops run local, TP matmuls turn their
+    # activation all-reduces into reduce-scatter/all-gather pairs (2x fewer
+    # bytes). Enabled together with SP attention.
+    if dist is not None and getattr(dist, "sp_attention", False) \
+            and s % dist.axis_size(dist.model_axis) == 0:
+        res_spec = __import__("jax").sharding.PartitionSpec(
+            dist.batch_axes, dist.model_axis, None)
+    elif dist is not None:
+        res_spec = dist.batch_spec(3)
+    else:
+        res_spec = None
+    if dist is not None:
+        h = dist.constrain(h, res_spec)
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh, aux_l = _block(lp, hh, positions, cfg, dist, use_pallas)
+        if dist is not None:
+            hh = dist.constrain(hh, res_spec)
+        return (hh, aux + aux_l), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["layers"])
+    if last_only:
+        h = h[:, -1:, :]
+    logits = unembed(params, h, cfg)
+    return logits, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
+    dtype = dtype or cfg.compute_dtype
+    lyr = cfg.n_layers
+    if cfg.family == "mla_moe":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((lyr, batch, max_seq, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros((lyr, batch, max_seq, m.qk_rope_dim),
+                                    dtype)}
+    if cfg.kv_cache_dtype == "int8":
+        kh = cfg.n_kv_heads
+        return {"k": jnp.zeros((lyr, batch, max_seq, kh, cfg.hd), jnp.int8),
+                "v": jnp.zeros((lyr, batch, max_seq, kh, cfg.hd), jnp.int8),
+                "k_scale": jnp.zeros((lyr, batch, max_seq, kh), jnp.float32),
+                "v_scale": jnp.zeros((lyr, batch, max_seq, kh), jnp.float32)}
+    return {"k": jnp.zeros((lyr, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((lyr, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dtype)}
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: [B, 1]; pos: scalar step index. Returns (logits, new cache)."""
+    h = embed_tokens(params, tokens, cfg)
+
+    def body(hh, xs):
+        lp, lc = xs
+        hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "mla_moe":
+            a, new_c = MLA.mla_decode(lp["attn"], hn, lc, pos, cfg,
+                                      use_pallas)
+        else:
+            a, new_c = L.attention_decode(lp["attn"], hn, lc, pos, cfg,
+                                          use_pallas)
+        hh = hh + a
+        hn = L.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            m, _ = MOE.moe_block(lp["moe"], hn, cfg, dist, use_pallas)
+        else:
+            m = L.mlp_block(lp["mlp"], hn, cfg.mlp_type, use_pallas)
+        return hh + m, new_c
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    logits = unembed(params, h, cfg)
+    return logits, new_cache

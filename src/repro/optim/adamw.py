@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay + global-norm clipping (pure pytree,
+no optax). Moments are stored f32 and inherit the parameter sharding (plus
+FSDP) via dist.sharding rules — opt state is just another param-shaped tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_state(params) -> dict:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr: Optional[jnp.ndarray] = None
+                  ) -> Tuple[Any, dict, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    lr = cfg.lr if lr is None else lr
+    grads, norm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * pf)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, norm

@@ -1,0 +1,37 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Used by the shard_map DDP train step (launch/train.py --grad-compress):
+per-device gradients are quantized to int8 with a pmax-shared per-tensor
+scale, psum'd in int32 (exact integer sum), dequantized, and the local
+quantization residual is carried as error feedback into the next step —
+the standard EF-SGD construction, which keeps convergence unbiased in the
+long run while cutting DP wire bytes 4x vs f32 (2x vs bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import compressed_psum
+
+
+def init_error_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def allreduce_mean(grads, axis: str):
+    """Uncompressed baseline."""
+    return jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis), grads)
+
+
+def allreduce_compressed(grads, err_state, axis: str):
+    """Returns (mean grads, new error state)."""
+    return compressed_psum(grads, err_state, axis)
+
+
+def compression_wire_bytes(params) -> dict:
+    """Static accounting: bytes on the wire per all-reduce, f32 vs int8."""
+    n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    return {"f32": 4 * n, "bf16": 2 * n, "int8_ef": n + 4 * len(
+        jax.tree_util.tree_leaves(params))}

@@ -1,0 +1,32 @@
+"""LR schedules as pure step -> lr functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def warmup_stable_decay(base_lr: float, warmup_steps: int, total_steps: int,
+                        decay_frac: float = 0.2, min_ratio: float = 0.05):
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        dec = base_lr * (1 - (1 - min_ratio) * t)
+        stable = jnp.where(step < decay_start, base_lr, dec)
+        return jnp.where(step < warmup_steps, warm, stable)
+    return lr

@@ -1,0 +1,124 @@
+"""BSR format tests: pack/unpack exactness, paper-format equivalence,
+compression accounting, work-list coverage (paper §3.2, §3.5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsr import (BSRMatrix, build_work_list, pack_dense,
+                            pack_quantized, paper_bsr_nbytes, to_dense,
+                            to_paper_bsr)
+from repro.core.pruning import PruneConfig, group_mask
+from repro.core.quant import QuantConfig, group_minmax_params, quantize
+from repro.core.saliency import group_saliency
+
+S = settings(max_examples=15, deadline=None)
+
+
+def _random_case(seed, n=32, k=128, g=16, sparsity=0.5, balanced=True):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    gsal = group_saliency(jnp.square(w), g)
+    gm = group_mask(gsal, PruneConfig(sparsity=sparsity, group_size=g,
+                                      row_balanced=balanced))
+    return w, gm
+
+
+@S
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.25, 0.5, 0.75]),
+       st.booleans())
+def test_pack_dense_matches_masked_quantized(seed, sparsity, balanced):
+    g = 16
+    w, gm = _random_case(seed, sparsity=sparsity, balanced=balanced)
+    qcfg = QuantConfig(bits=4, group_size=g)
+    bsr = pack_dense(w, gm, qcfg)
+    dense = to_dense(bsr)
+    # kept positions: quant error bounded; pruned positions: exactly zero
+    mask = np.repeat(np.asarray(gm), g, axis=1)
+    assert (np.asarray(dense)[~mask] == 0).all()
+    err = np.abs(np.asarray(dense) - np.asarray(w))[mask]
+    assert err.max() <= float(np.abs(np.asarray(w)).max()) / 15 + 1e-5
+
+
+@S
+@given(st.integers(0, 2**31 - 1))
+def test_paper_bsr_roundtrip_counts(seed):
+    w, gm = _random_case(seed, balanced=False)
+    bsr = pack_dense(w, gm, QuantConfig(group_size=16))
+    row_index, groups, values, scales, zeros = to_paper_bsr(bsr)
+    gm_np = np.asarray(gm)
+    # rowIndex prefix property (paper §3.2)
+    assert row_index[0] == 0
+    assert row_index[-1] == gm_np.sum()
+    counts = np.diff(row_index)
+    np.testing.assert_array_equal(counts, gm_np.sum(axis=1))
+    # group columns are the kept columns, sorted per row
+    for i in range(gm_np.shape[0]):
+        cols = groups[row_index[i]:row_index[i + 1]]
+        np.testing.assert_array_equal(np.sort(np.nonzero(gm_np[i])[0]), cols)
+
+
+def test_compression_ratio_formula():
+    """W4 S50 G16 paper-format compression vs fp16 ~= 16/(4+overhead)x."""
+    w, gm = _random_case(0, n=64, k=256, sparsity=0.5)
+    bsr = pack_dense(w, gm, QuantConfig(group_size=16))
+    nbytes = paper_bsr_nbytes(*to_paper_bsr(bsr))
+    fp16 = 2 * 64 * 256
+    ratio = fp16 / nbytes
+    # 4 bits + (2B scale + 1B zero + 2B idx)/16 elems = 6.5 bits/elem kept,
+    # x2 from sparsity => ~4.9x vs fp16
+    assert 4.0 < ratio < 6.0
+
+
+@S
+@given(st.integers(0, 2**31 - 1), st.booleans(),
+       st.sampled_from([(8, 2), (16, 4), (8, 8)]))
+def test_work_list_covers_every_group_once(seed, balanced, blocks):
+    bn, bm = blocks
+    w, gm = _random_case(seed, n=64, k=128, balanced=balanced)
+    bsr = pack_dense(w, gm, QuantConfig(group_size=16))
+    idx = np.asarray(bsr.idx)
+    n, m = idx.shape
+    # pad like ops.gqsa_gemv does
+    npad = (-n) % bn
+    mpad = (-m) % bm
+    idx_p = np.pad(idx, ((0, npad), (0, mpad)), constant_values=-1)
+    wl = build_work_list(jnp.asarray(idx_p), bn, bm)
+    # every (row_block, chunk) with any useful slot appears exactly once
+    seen = set(zip(np.asarray(wl.row_block).tolist(),
+                   np.asarray(wl.chunk).tolist()))
+    assert len(seen) == wl.n_items, "duplicate work items"
+    nrb = idx_p.shape[0] // bn
+    for r in range(nrb):
+        blk = idx_p[r * bn:(r + 1) * bn]
+        useful = int((blk >= 0).sum(axis=1).max())
+        nch = max(1, -(-useful // bm))
+        for c in range(nch):
+            assert (r, c) in seen
+    # first flags: exactly one per visited row block, on its first chunk
+    rb = np.asarray(wl.row_block)
+    fs = np.asarray(wl.first)
+    for r in set(rb.tolist()):
+        flags = fs[rb == r]
+        assert flags[0] == 1 and flags[1:].sum() == 0
+
+
+def test_pack_quantized_preserves_tuned_params():
+    """E2E-OQP path: packing must keep trained (s, z) bit-exact."""
+    rng = np.random.default_rng(3)
+    n, k, g = 16, 64, 16
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    qcfg = QuantConfig(group_size=g)
+    s, z = group_minmax_params(w, qcfg)
+    s = s * 1.1  # pretend these were fine-tuned
+    q = quantize(w, s, z, qcfg)
+    gm = jnp.asarray(rng.random((n, k // g)) < 0.5)
+    gm = gm.at[:, 0].set(True)   # >=1 group per row
+    bsr = pack_quantized(q, gm, s, z, group_size=g)
+    # check kept groups' scale appear unchanged in the packed form
+    idx = np.asarray(bsr.idx)
+    sc = np.asarray(bsr.scale)
+    s_np = np.asarray(s)
+    for i in range(n):
+        for j, c in enumerate(idx[i]):
+            if c >= 0:
+                assert sc[i, j] == s_np[i, c]

@@ -1,0 +1,75 @@
+"""Checkpoint manager: roundtrip, atomicity, GC, restore-onto-new-mesh."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+            "b": {"w": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16),
+                  "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    ckpt.save(3, t)
+    r = ckpt.restore(t)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_gc(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, _tree(s))
+    assert ckpt.latest_step() == 4
+    kept = sorted(p.name for p in tmp_path.iterdir() if p.is_dir())
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_async_save(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=True)
+    ckpt.save(1, _tree())
+    ckpt.wait()
+    assert ckpt.latest_step() == 1
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A .tmp dir must never be considered a checkpoint."""
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(1, _tree())
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert ckpt.latest_step() == 1
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(1, _tree())
+    bad = _tree()
+    bad["a"] = jnp.zeros((9, 16))
+    with pytest.raises(ValueError):
+        ckpt.restore(bad)
+
+
+def test_restore_with_shardings_single_device(tmp_path):
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    ckpt.save(1, t)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), t)
+    r = ckpt.restore(t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(t["a"]), np.asarray(r["a"]))

@@ -1,0 +1,134 @@
+"""End-to-end GQSA compression pipeline on a tiny LM (paper Figure 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.bqpo import BQPOConfig
+from repro.core.e2e_oqp import E2EConfig, freeze_int
+from repro.core.gqs_layer import GQSAConfig, apply_linear, dequant_dense
+from repro.core.model_compress import (compress_params, compress_params_w4,
+                                       compression_report)
+from repro.core.pipeline import gqsa_compress, oneshot, pack_frozen
+from repro.core.pruning import PruneConfig
+from repro.core.quant import QuantConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.registry import get_model, lm_loss
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    batches = [{k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
+               for i in range(3)]
+    return cfg, api, params, batches
+
+
+def test_two_stage_beats_oneshot(tiny):
+    cfg, api, params, batches = tiny
+    held_out = {k: jnp.asarray(v) for k, v in
+                SyntheticLM(cfg.vocab, 32, 4, seed=99).host_batch(0).items()}
+    l_oneshot = float(lm_loss(api.forward(
+        oneshot(params, batches, cfg), held_out, cfg)[0],
+        held_out["labels"]))
+    packed, report = gqsa_compress(
+        params, batches, cfg, bqpo_cfg=BQPOConfig(steps=25, lr=1e-3),
+        e2e_cfg=E2EConfig(steps=25, lr=1e-3))
+    l_two = float(lm_loss(api.forward(packed, held_out, cfg)[0],
+                          held_out["labels"]))
+    assert l_two < l_oneshot + 0.05
+    assert report["e2e_loss"][-1] < report["e2e_loss"][0]
+
+
+def test_packed_equals_frozen_int_forward(tiny):
+    """Packing must preserve the E2E-tuned model bit-for-bit (the paper's
+    'no masks needed after packing' claim)."""
+    cfg, api, params, batches = tiny
+    gqsa = GQSAConfig()
+    from repro.core.bqpo import bqpo
+    fq, _ = bqpo(params, [b["tokens"] for b in batches], cfg, gqsa,
+                 BQPOConfig(steps=3, lr=1e-3))
+    frozen = freeze_int(fq, gqsa)
+    packed = pack_frozen(frozen)
+    lf, _ = api.forward(frozen, batches[0], cfg)
+    lp, _ = api.forward(packed, batches[0], cfg)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lf),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_compress_params_sparsity_observed(tiny):
+    cfg, api, params, batches = tiny
+    for s in (0.3, 0.5):
+        gqsa = GQSAConfig(prune=PruneConfig(sparsity=s, group_size=16))
+        packed = compress_params(params, cfg, gqsa)
+        # check one layer's BSR: kept groups per row ~= (1-s) * groups
+        bsr = packed["layers"]["attn"]["wq"]["bsr"]
+        k = bsr.shape[1]
+        m = bsr.idx.shape[-1]
+        frac = m / (k // 16)
+        assert abs(frac - (1 - s)) < 0.1
+
+
+def test_compression_report_ratio(tiny):
+    cfg, api, params, batches = tiny
+    packed = compress_params(params, cfg, GQSAConfig())
+    rep = compression_report(params["layers"], packed["layers"])
+    # padded in-memory ratio is conservative; must still be > 1.5x vs fp16
+    assert rep["ratio_vs_fp16"] > 1.5
+
+
+def test_w4_baseline_forward(tiny):
+    cfg, api, params, batches = tiny
+    packed = compress_params_w4(params, cfg, QuantConfig(group_size=16))
+    logits, _ = api.forward(packed, batches[0], cfg)
+    fp_logits, _ = api.forward(params, batches[0], cfg)
+    assert bool(jnp.isfinite(logits).all())
+    # W4 is a good approximation of FP
+    cos = np.corrcoef(np.asarray(logits).ravel(),
+                      np.asarray(fp_logits).ravel())[0, 1]
+    assert cos > 0.95
+
+
+def test_gqsa_loss_ordering_w4_vs_w4s50(tiny):
+    """More compression => no better loss (sanity on a fixed model)."""
+    cfg, api, params, batches = tiny
+    b = batches[0]
+    fp = float(lm_loss(api.forward(params, b, cfg)[0], b["labels"]))
+    w4 = float(lm_loss(api.forward(
+        compress_params_w4(params, cfg, QuantConfig(group_size=16)),
+        b, cfg)[0], b["labels"]))
+    s50 = float(lm_loss(api.forward(
+        compress_params(params, cfg, GQSAConfig()), b, cfg)[0],
+        b["labels"]))
+    assert w4 >= fp - 0.02
+    assert s50 >= w4 - 0.05
+
+
+def test_gqs_layer_representations_agree():
+    """fp / fake-quant / frozen-int / packed paths of one linear agree."""
+    rng = np.random.default_rng(0)
+    n, k, g = 32, 128, 16
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+    gqsa = GQSAConfig()
+    from repro.core.saliency import HessianStats
+    from repro.core.gqs_layer import make_fake_quant, pack_gqsa
+    stats = HessianStats.init(k, diag_only=True).update(x)
+    fq = make_fake_quant(w, stats, gqsa)
+    y_fq = apply_linear(fq, x)
+    frozen = freeze_int({"lin": fq}, gqsa)["lin"]
+    y_frozen = apply_linear(frozen, x)
+    packed = pack_gqsa(fq, gqsa)
+    y_packed = apply_linear(packed, x)
+    np.testing.assert_allclose(np.asarray(y_fq), np.asarray(y_frozen),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_frozen),
+                               rtol=1e-4, atol=1e-4)
+    # dense reconstruction matches too
+    np.testing.assert_allclose(np.asarray(dequant_dense(packed)),
+                               np.asarray(dequant_dense(fq, gqsa.quant)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,87 @@
+"""Property tests for per-group quantization (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantConfig, dequantize, fake_quant,
+                              group_minmax_params, int8_symmetric_dequant,
+                              int8_symmetric_quant, pack_int4, quantize,
+                              unpack_int4)
+
+S = settings(max_examples=20, deadline=None)
+
+
+@S
+@given(st.integers(1, 6).map(lambda i: 16 * i),
+       st.integers(1, 4).map(lambda i: 8 * i),
+       st.sampled_from([4, 8, 16, 32]),
+       st.integers(0, 2 ** 31 - 1))
+def test_quant_error_bounded_by_half_scale(k, n, g, seed):
+    if k % g:
+        k = (k // g + 1) * g
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(n, k)),
+                    jnp.float32)
+    cfg = QuantConfig(bits=4, group_size=g)
+    s, z = group_minmax_params(w, cfg)
+    q = quantize(w, s, z, cfg)
+    wd = dequantize(q, s, z, cfg)
+    err = jnp.abs(w - wd).reshape(n, k // g, g)
+    bound = (s / 2 + 1e-6)[..., None]
+    assert bool((err <= bound).all())
+
+
+@S
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 3, 4]))
+def test_quant_codes_in_range(seed, bits):
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(8, 32)) * 10,
+                    jnp.float32)
+    cfg = QuantConfig(bits=bits, group_size=16)
+    s, z = group_minmax_params(w, cfg)
+    q = quantize(w, s, z, cfg)
+    assert int(q.max()) <= (1 << bits) - 1
+    assert int(q.min()) >= 0
+
+
+@S
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int4_pack_roundtrip_exact(seed):
+    q = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 16, size=(5, 7, 10)), jnp.uint8)
+    assert (unpack_int4(pack_int4(q)) == q).all()
+
+
+def test_pack_halves_bytes():
+    q = jnp.zeros((8, 64), jnp.uint8)
+    assert pack_int4(q).nbytes == q.nbytes // 2
+
+
+@S
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fake_quant_idempotent(seed):
+    """quantizing an already-dequantized tensor is exact (fixed point)."""
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(4, 32)),
+                    jnp.float32)
+    cfg = QuantConfig(bits=4, group_size=16)
+    w1 = fake_quant(w, cfg)
+    w2 = fake_quant(w1, cfg)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+
+
+def test_fake_quant_ste_gradient_close_to_identity():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(4, 32)),
+                    jnp.float32)
+    cfg = QuantConfig(bits=4, group_size=16)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, cfg)))(w)
+    # STE through round: gradient ~= 1 everywhere in-range
+    assert float(jnp.mean(jnp.abs(g - 1.0))) < 0.2
+
+
+@S
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_symmetric_roundtrip(seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(100,)) * 5,
+                    jnp.float32)
+    q, s = int8_symmetric_quant(x)
+    xd = int8_symmetric_dequant(q, s)
+    assert float(jnp.max(jnp.abs(x - xd))) <= float(s) / 2 + 1e-6
