@@ -1,5 +1,6 @@
-"""Batched serving with GQSA-compressed weights: compare FP vs W4 vs
-GQSA-W4S50 throughput through the continuous-batching loop.
+"""Batched serving with GQSA-compressed weights through the
+continuous-batching engine: compare FP vs W4 vs GQSA-W4S50 throughput,
+TTFT and TPOT at equal slots/requests.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -13,10 +14,12 @@ def main():
         results[comp] = serve.main([
             "--arch", "llama2_7b", "--reduced", "--compress", comp,
             "--requests", "6", "--slots", "3", "--max-new", "8",
-            "--max-seq", "48"])
+            "--max-seq", "48", "--page-size", "8"])
     print("\nsummary (CPU wall-clock; on TPU the GQSA bytes win dominates):")
     for comp, r in results.items():
-        print(f"  {comp:5s}: {r['tok_per_s']:.1f} tok/s")
+        print(f"  {comp:5s}: {r['tok_per_s']:6.1f} tok/s | "
+              f"TTFT p50 {r['ttft_ms_p50']:7.1f}ms | "
+              f"TPOT p50 {r['tpot_ms_p50']:6.2f}ms")
 
 
 if __name__ == "__main__":

@@ -92,7 +92,7 @@ def pack_dense(w: jnp.ndarray, gmask: jnp.ndarray,
     m = int(counts.max()) if counts.size else 0
     m = max(m, 1)
 
-    if counts.size and counts.min() == counts.max():
+    if counts.size and counts.max() and counts.min() == counts.max():
         # row-balanced fast path: nonzero() is row-major => already sorted
         idx = np.nonzero(gm)[1].reshape(n, m).astype(np.int32)
     else:
@@ -140,7 +140,7 @@ def pack_quantized(q_codes: jnp.ndarray, gmask: jnp.ndarray,
     gm = np.asarray(gmask)
     counts = gm.sum(axis=1)
     m = max(int(counts.max()) if counts.size else 0, 1)
-    if counts.size and counts.min() == counts.max():
+    if counts.size and counts.max() and counts.min() == counts.max():
         idx = np.nonzero(gm)[1].reshape(n, m).astype(np.int32)
     else:
         idx = np.full((n, m), -1, dtype=np.int32)
@@ -185,20 +185,18 @@ def to_paper_bsr(bsr: BSRMatrix):
     scale = np.asarray(bsr.scale)
     zero = np.asarray(bsr.zero)
     n, m = idx.shape
+    keep = idx >= 0                                     # [N, M] bool
+    # rowIndex = exclusive prefix sum of per-row kept-group counts
     row_index = np.zeros(n + 1, dtype=np.int64)
-    groups, values, scales, zeros = [], [], [], []
-    for i in range(n):
-        cols = idx[i][idx[i] >= 0]
-        row_index[i + 1] = row_index[i] + cols.shape[0]
-        for j, c in enumerate(cols):
-            groups.append(c)
-            values.append(vals[i, j])
-            scales.append(scale[i, j])
-            zeros.append(zero[i, j])
-    return (row_index, np.asarray(groups, np.int32),
-            np.stack(values) if values else np.zeros((0, bsr.group_size // 2),
-                                                     np.uint8),
-            np.asarray(scales, np.float32), np.asarray(zeros, np.float32))
+    np.cumsum(keep.sum(axis=1), out=row_index[1:])
+    # padded slots are right-aligned after the sorted kept columns, so a
+    # row-major boolean gather preserves (row, sorted-col) order exactly
+    groups = idx[keep].astype(np.int32)
+    values = vals[keep]
+    if values.size == 0:
+        values = np.zeros((0, bsr.group_size // 2), np.uint8)
+    return (row_index, groups, values,
+            scale[keep].astype(np.float32), zero[keep].astype(np.float32))
 
 
 def paper_bsr_nbytes(row_index, groups, values, scales, zeros,

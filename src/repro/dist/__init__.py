@@ -1,0 +1,2 @@
+"""Distribution utilities: mesh planning, sharding rules, collectives,
+fault tolerance. ``DistContext`` is the single handle model code receives."""

@@ -1,0 +1,56 @@
+"""Elastic mesh planning: build the largest usable mesh from the devices
+that are actually alive, preserving tensor parallelism when possible.
+
+A TPU "pod" is modeled as 256 chips; multi-pod plans add a leading 'pod'
+axis so cross-pod traffic (DCN) is separable from in-pod ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+POD_SIZE = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 1,
+              multi_pod: bool = False) -> MeshPlan:
+    mp = max(1, model_parallel)
+    if n_devices % mp:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"model_parallel={mp}")
+    if multi_pod and n_devices > POD_SIZE:
+        if n_devices % POD_SIZE:
+            raise ValueError(f"multi-pod plan needs a multiple of "
+                             f"{POD_SIZE} devices, got {n_devices}")
+        pods = n_devices // POD_SIZE
+        return MeshPlan((pods, POD_SIZE // mp, mp), ("pod", "data", "model"))
+    return MeshPlan((n_devices // mp, mp), ("data", "model"))
+
+
+def degrade_after_failure(plan: MeshPlan, surviving: int) -> MeshPlan:
+    """Largest plan that fits on ``surviving`` devices. The data axis
+    shrinks first; TP degrades (halves) only when even data=1 won't fit."""
+    mp = plan.shape[-1]
+    while mp > 1 and surviving < mp:
+        mp //= 2
+    data = max(1, surviving // mp)
+    return MeshPlan((data, mp), ("data", "model"))
+
+
+def build_mesh(plan: MeshPlan):
+    import jax
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:plan.n_devices]).reshape(plan.shape)
+    return Mesh(devs, plan.axes)

@@ -1,0 +1,65 @@
+"""Fault tolerance for the training loop: straggler watchdog + retrying
+step wrapper. Both are host-side and framework-free."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Optional
+
+
+class StepWatchdog:
+    """EMA step-time tracker that flags stragglers.
+
+    A step slower than ``threshold * ema`` (after ``warmup_steps``
+    observations) is counted as a straggler and does NOT pollute the EMA,
+    so one slow host can't mask the next."""
+
+    def __init__(self, warmup_steps: int = 5, threshold: float = 3.0,
+                 decay: float = 0.9):
+        self.warmup_steps = warmup_steps
+        self.threshold = threshold
+        self.decay = decay
+        self.ema: Optional[float] = None
+        self.steps = 0
+        self.stragglers = 0
+
+    def observe(self, dt: float) -> bool:
+        self.steps += 1
+        if self.ema is not None and self.steps > self.warmup_steps \
+                and dt > self.threshold * self.ema:
+            self.stragglers += 1
+            return True
+        self.ema = dt if self.ema is None \
+            else self.decay * self.ema + (1 - self.decay) * dt
+        return False
+
+
+class TrainerHealth:
+    """Aggregated view for log lines / health endpoints."""
+
+    def __init__(self, watchdog: StepWatchdog):
+        self.watchdog = watchdog
+        self.started = time.time()
+
+    def as_dict(self) -> dict:
+        w = self.watchdog
+        return {"steps": w.steps, "stragglers": w.stragglers,
+                "ema_s": round(w.ema, 4) if w.ema is not None else None}
+
+
+def retrying(fn: Callable, max_retries: int = 3,
+             backoff_s: float = 0.0) -> Callable:
+    """Retry transient failures (preempted host, flaky link): up to
+    ``max_retries`` total attempts, re-raising the last error."""
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        for attempt in range(max_retries):
+            try:
+                return fn(*args, **kwargs)
+            except Exception:
+                if attempt == max_retries - 1:
+                    raise
+                if backoff_s:
+                    time.sleep(backoff_s * (2 ** attempt))
+    return wrapped

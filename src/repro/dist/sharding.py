@@ -1,0 +1,79 @@
+"""DistContext + parameter sharding rules (TP / FSDP over a named mesh).
+
+The context is a thin, picklable description of how this process wants
+tensors laid out; model code only calls :meth:`constrain`,
+:meth:`batch_spec` and :meth:`axis_size`, so a ``mesh=None`` context is a
+valid single-device no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[object] = None          # jax.sharding.Mesh or None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False                     # ZeRO-3 param sharding over data
+    seq_axis: Optional[str] = None         # sequence-sharded KV (long ctx)
+    sp_attention: bool = False             # sequence-parallel attention
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return self.batch_axes[-1] if self.fsdp else None
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        return int(self.mesh.shape.get(name, 1))
+
+    def batch_spec(self, ndim: int) -> P:
+        """Batch on dim 0, replicated elsewhere."""
+        return P(self.batch_axes, *([None] * (ndim - 1)))
+
+    def constrain(self, x, spec):
+        if self.mesh is None or spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _leaf_spec(leaf, dist: DistContext) -> P:
+    """TP rule: shard the widest model-axis-divisible trailing dim; under
+    FSDP additionally shard one other dim over the data axis (ZeRO-3).
+    Stacked-layer leaves carry a leading [L] dim that stays replicated."""
+    shape = getattr(leaf, "shape", ())
+    ndim = len(shape)
+    spec = [None] * ndim
+    mp = dist.axis_size(dist.model_axis)
+    tp_dim = None
+    if mp > 1 and ndim >= 1:
+        # prefer the LAST eligible dim (the contraction/feature dim), so
+        # e.g. [L, N, K] shards K and stacked-layer dims stay whole
+        for i in range(ndim - 1, 0, -1):
+            if shape[i] % mp == 0 and shape[i] >= mp:
+                spec[i] = dist.model_axis
+                tp_dim = i
+                break
+    if dist.fsdp:
+        dp = dist.fsdp_axis
+        dsz = dist.axis_size(dp)
+        if dsz > 1:
+            for i in range(ndim - 1, 0, -1):
+                if i != tp_dim and shape[i] % dsz == 0 and shape[i] >= dsz:
+                    spec[i] = dp
+                    break
+    return P(*spec)
+
+
+def param_shardings(params, dist: DistContext):
+    """Tree of NamedShardings (or None when there is no mesh)."""
+    if dist is None or dist.mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(dist.mesh, _leaf_spec(l, dist)), params)

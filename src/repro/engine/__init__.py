@@ -1,0 +1,19 @@
+"""Continuous-batching inference engine (DESIGN.md §3).
+
+Paged KV cache + task-centric scheduler + batched prefill / fused decode
+on top of the GQSA-compressed model zoo::
+
+    from repro.engine import InferenceEngine, EngineConfig, SamplingParams
+    eng = InferenceEngine(cfg, params, EngineConfig(num_slots=4))
+    eng.submit(prompt_tokens, max_new_tokens=32)
+    results = eng.run()
+"""
+from repro.engine.engine import EngineConfig, InferenceEngine
+from repro.engine.kv_cache import PageAllocator, PagedKVCache
+from repro.engine.metrics import EngineMetrics
+from repro.engine.sampling import SamplingParams, sample
+from repro.engine.scheduler import Request, Scheduler
+
+__all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
+           "PagedKVCache", "EngineMetrics", "SamplingParams", "sample",
+           "Request", "Scheduler"]

@@ -1,0 +1,229 @@
+"""The continuous-batching inference engine (DESIGN.md §3).
+
+One jitted *batched prefill* runs each admission group's full prompts
+through flash attention and scatters their K/V into the paged cache; one
+jitted *fused decode step* advances every slot at its own position and
+samples the next token on device. The sampled token array is fed straight
+back into the next decode call (device-side token feedback) — the host
+never pulls tokens mid-flight. Because stopping is purely budget-based,
+host control flow needs no per-step sync: the loop dispatches a whole
+decode *segment* (until the earliest active request exhausts its budget)
+and blocks once at the segment boundary, which is also where timestamps
+are taken and slots are evicted/refilled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.kv_cache import PagedKVCache
+from repro.engine.metrics import EngineMetrics
+from repro.engine.sampling import SamplingParams, sample
+from repro.engine.scheduler import DECODE, Request, Scheduler
+from repro.models.registry import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 4
+    max_seq: int = 64                 # per-request prompt + budget cap
+    page_size: int = 16
+    num_pages: Optional[int] = None   # None: num_slots * max_seq / page_size
+    prompt_bucket_min: int = 8        # prefill pad bucket floor (pow2 above)
+    use_pallas: bool = False
+    seed: int = 0
+
+
+def _bucket(n: int, lo: int) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.lru_cache(maxsize=32)
+def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
+    """Jitted prefill/decode steps, shared across engine instances with the
+    same (model config, sampling, backend) — a fresh engine per workload
+    must not recompile (both keys are frozen dataclasses)."""
+    api = get_model(cfg)
+
+    def prefill_fn(params, cache, tokens, lengths, block_tables, rng):
+        logits, cache = api.prefill(params, cache, tokens, lengths,
+                                    block_tables, cfg, None, use_pallas)
+        rng, sub = jax.random.split(rng)
+        first = sample(logits[:, -1, :], sub, sampling)
+        return first, cache, rng
+
+    def decode_fn(params, cache, tokens, positions, block_tables,
+                  active, rng):
+        logits, cache = api.decode_step(params, cache, tokens[:, None],
+                                        positions, cfg, None, use_pallas,
+                                        block_tables=block_tables)
+        rng, sub = jax.random.split(rng)
+        nxt = sample(logits[:, -1, :], sub, sampling)
+        return nxt, positions + active, cache, rng
+
+    return jax.jit(prefill_fn), jax.jit(decode_fn)
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
+                 sampling: SamplingParams = SamplingParams()):
+        api = get_model(cfg)
+        if api.prefill is None or api.init_paged_cache is None:
+            raise NotImplementedError(
+                f"family {cfg.family!r} lacks prefill/paged-cache support")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg
+        self.sampling = sampling
+        self.api = api
+        if engine_cfg.use_pallas and cfg.kv_cache_dtype == "int8":
+            import warnings
+            warnings.warn(
+                "paged decode attention has no pallas kernel yet: linears "
+                "run the pallas path but int8 decode attention falls back "
+                "to the jnp reference", stacklevel=2)
+        self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
+                               engine_cfg.max_seq, engine_cfg.page_size,
+                               engine_cfg.num_pages)
+        self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
+                                   engine_cfg.max_seq)
+        self.metrics = EngineMetrics()
+        self._rng = jax.random.PRNGKey(engine_cfg.seed)
+        b = engine_cfg.num_slots
+        self._tokens = jnp.zeros((b,), jnp.int32)      # device-side feedback
+        self._positions = jnp.zeros((b,), jnp.int32)
+        self._active = jnp.zeros((b,), jnp.int32)
+        self._block_tables = self.kv.device_block_tables()
+        self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
+        self._prefill_fn, self._decode_fn = _step_fns(
+            cfg, sampling, engine_cfg.use_pallas)
+
+    # -- API ----------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        rid = self.scheduler.submit(prompt, max_new_tokens)
+        self.metrics.record_enqueue(rid)
+        return rid
+
+    def run(self) -> Dict:
+        """Serve until the queue and all slots drain. Returns
+        {"results": [...], "metrics": {...}} (results in completion order)."""
+        sch = self.scheduler
+        self.metrics.run_started()
+        while sch.has_work():
+            admitted = sch.admit()
+            if admitted:
+                self._do_prefill(admitted)
+            actives = [r for r in sch.active() if r.state == DECODE]
+            if not actives:
+                if sch.waiting and not sch.active():
+                    head = sch.waiting[0]
+                    raise RuntimeError(
+                        f"request {head.rid} needs "
+                        f"{self.kv.pages_needed(head.total_tokens)} pages "
+                        f"but the pool only has {self.kv.num_pages}")
+                continue
+            # decode segment: no slot can exceed its budget before the
+            # earliest one finishes, so no host sync inside the segment
+            seg = max(1, min(r.max_new_tokens - r.produced for r in actives))
+            finished: List[Request] = []
+            for _ in range(seg):
+                self._tokens, self._positions, self.kv.data, self._rng = \
+                    self._decode_fn(self.params, self.kv.data, self._tokens,
+                                    self._positions, self._block_tables,
+                                    self._active, self._rng)
+                idx = len(self._token_log)
+                self._token_log.append(self._tokens)
+                for r in sch.active():
+                    r.log_entries.append(idx)
+                finished.extend(sch.step_decoded())
+            jax.block_until_ready(self._tokens)        # segment boundary
+            t = self.metrics.now()
+            self.metrics.decode_steps += seg
+            for r in finished:
+                self.metrics.record_finish(r.rid, t, r.produced)
+                sch.finish(r)
+            if finished:
+                self._sync_slot_state()
+        self.metrics.run_finished()
+        return {"results": self._materialize(), "metrics":
+                self.metrics.summary()}
+
+    # -- internals ----------------------------------------------------------
+
+    def _do_prefill(self, admitted: List[Request]) -> None:
+        b = self.ecfg.num_slots
+        # cap the pow2 bucket at max_seq: prompt_len <= max_seq is enforced
+        # at submit, and wider buckets are pure waste (FLOPs + a compile)
+        s = min(_bucket(max(r.prompt_len for r in admitted),
+                        self.ecfg.prompt_bucket_min), self.ecfg.max_seq)
+        tokens = np.zeros((b, s), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        # decoding slots must be invisible to the prefill scatter: their
+        # rows get length 0 + all-sentinel block tables
+        bt = np.full_like(self.kv.block_tables, self.kv.sentinel)
+        mask = np.zeros((b,), bool)
+        for r in admitted:
+            self.metrics.record_admit(r.rid)
+            tokens[r.slot, :r.prompt_len] = r.prompt
+            lengths[r.slot] = r.prompt_len
+            bt[r.slot] = self.kv.block_tables[r.slot]
+            mask[r.slot] = True
+        first, self.kv.data, self._rng = self._prefill_fn(
+            self.params, self.kv.data, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(bt), self._rng)
+        jax.block_until_ready(first)
+        t = self.metrics.now()
+        idx = len(self._token_log)
+        self._token_log.append(first)
+        done_now = []
+        for r in admitted:
+            r.state = DECODE
+            r.produced = 1                       # prefill produced token #1
+            r.log_entries = [idx]
+            self.metrics.record_first_token(r.rid, t)
+            if r.produced >= r.max_new_tokens:   # max_new_tokens == 1
+                self.metrics.record_finish(r.rid, t, r.produced)
+                done_now.append(r)
+        for r in done_now:
+            self.scheduler.finish(r)
+        # merge the admitted slots into the device-side decode state
+        m = jnp.asarray(mask)
+        self._tokens = jnp.where(m, first, self._tokens)
+        self._positions = jnp.where(m, jnp.asarray(lengths), self._positions)
+        self._sync_slot_state()
+
+    def _sync_slot_state(self) -> None:
+        """Refresh device copies of the block tables + active mask after a
+        scheduling event (admission or eviction)."""
+        self._block_tables = self.kv.device_block_tables()
+        act = np.zeros((self.ecfg.num_slots,), np.int32)
+        for i, slot in enumerate(self.scheduler.slots):
+            if slot.request is not None and slot.request.state == DECODE:
+                act[i] = 1
+        self._active = jnp.asarray(act)
+
+    def _materialize(self) -> List[Dict]:
+        """One host sync: stack the token log and slice every request's
+        generated tokens out of it (completion order)."""
+        if self._token_log:
+            mat = np.asarray(jnp.stack(self._token_log))
+        else:
+            mat = np.zeros((0, self.ecfg.num_slots), np.int32)
+        out = []
+        for r in self.scheduler.finished:
+            toks = mat[np.asarray(r.log_entries, np.int64), r.slot] \
+                if r.log_entries else np.zeros((0,), np.int32)
+            toks = toks[:r.produced]
+            r.output = toks.astype(np.int32)
+            out.append({"rid": r.rid, "prompt_len": r.prompt_len,
+                        "tokens": r.output, "n_generated": r.produced})
+        return out

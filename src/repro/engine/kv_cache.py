@@ -1,0 +1,91 @@
+"""Paged KV cache: a fixed pool of fixed-size pages + per-request block
+tables + a free-list allocator (DESIGN.md §3.2).
+
+The device pool is allocated ONCE (`api.init_paged_cache`) and never
+resized; requests borrow pages and return them on completion, so cache
+memory is bounded and fragmentation-free regardless of how many requests
+stream through. Block-table entries that hold no page carry the
+out-of-range sentinel ``num_pages``: scatter-writes to a sentinel page are
+dropped by XLA and gather-reads clip (and are masked by the per-slot
+length), so inactive slots cost nothing and corrupt nothing.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageAllocator:
+    """Free-list page allocator. O(1) alloc/free, pages are reused LIFO so
+    recently-touched pages (warm in cache) are handed out first."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: deque = deque(range(num_pages))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"out of KV pages: want {n}, have {len(self._free)}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
+class PagedKVCache:
+    """Host-side manager of the device page pool.
+
+    ``data`` is the device pytree from ``api.init_paged_cache`` (leaves
+    [L, P, page_size, ...]); it flows through the jitted prefill/decode
+    calls functionally and is stored back here each iteration.
+    """
+
+    def __init__(self, cfg, api, num_slots: int, max_seq: int,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        if api.init_paged_cache is None:
+            raise NotImplementedError(
+                f"model family {cfg.family!r} has no paged-cache support")
+        self.page_size = page_size
+        self.max_pages_per_slot = -(-max_seq // page_size)
+        # default pool: every slot can grow to max_seq simultaneously
+        self.num_pages = (num_slots * self.max_pages_per_slot
+                          if num_pages is None else num_pages)
+        self.sentinel = self.num_pages
+        self.data = api.init_paged_cache(cfg, self.num_pages, page_size)
+        self.allocator = PageAllocator(self.num_pages)
+        self.block_tables = np.full((num_slots, self.max_pages_per_slot),
+                                    self.sentinel, np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.allocator.can_alloc(self.pages_needed(n_tokens))
+
+    def assign(self, slot: int, n_tokens: int) -> None:
+        """Reserve pages for a request's full lifetime (prompt + budget) —
+        admission-time reservation means decode can never hit OOM."""
+        pages = self.allocator.alloc(self.pages_needed(n_tokens))
+        self._slot_pages[slot] = pages
+        self.block_tables[slot, :] = self.sentinel
+        self.block_tables[slot, :len(pages)] = pages
+
+    def release(self, slot: int) -> None:
+        self.allocator.free(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.block_tables[slot, :] = self.sentinel
+
+    def device_block_tables(self) -> jnp.ndarray:
+        return jnp.asarray(self.block_tables)

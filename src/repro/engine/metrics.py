@@ -1,0 +1,103 @@
+"""Serving metrics: TTFT, TPOT, tokens/s, p50/p99 request latency.
+
+Timestamps are taken at *synchronization points* of the engine loop
+(after the prefill block and after each decode segment's block), so they
+measure completed device work, not async dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    enqueue_t: float = 0.0
+    admit_t: float = 0.0
+    first_token_t: float = 0.0       # TTFT reference: end of prefill
+    finish_t: float = 0.0
+    n_generated: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_t - self.enqueue_t
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token after the first."""
+        n = max(self.n_generated - 1, 1)
+        return (self.finish_t - self.first_token_t) / n
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.enqueue_t
+
+
+class EngineMetrics:
+    def __init__(self):
+        self.requests: Dict[int, RequestTiming] = {}
+        self.start_t: Optional[float] = None
+        self.end_t: Optional[float] = None
+        self.decode_steps = 0
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def record_enqueue(self, rid: int) -> None:
+        self.requests[rid] = RequestTiming(enqueue_t=self.now())
+
+    def record_admit(self, rid: int) -> None:
+        self.requests[rid].admit_t = self.now()
+
+    def record_first_token(self, rid: int, t: float) -> None:
+        self.requests[rid].first_token_t = t
+
+    def record_finish(self, rid: int, t: float, n_generated: int) -> None:
+        self.requests[rid].finish_t = t
+        self.requests[rid].n_generated = n_generated
+
+    def run_started(self) -> None:
+        if self.start_t is None:
+            self.start_t = self.now()
+
+    def run_finished(self) -> None:
+        self.end_t = self.now()
+
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values() if r.finish_t > 0]
+        toks = sum(r.n_generated for r in done)
+        dt = ((self.end_t or self.now()) - (self.start_t or 0.0)) \
+            if self.start_t is not None else float("nan")
+        ttfts = [r.ttft_s for r in done]
+        tpots = [r.tpot_s for r in done if r.n_generated > 1]
+        lats = [r.latency_s for r in done]
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "seconds": dt,
+            "tok_per_s": toks / max(dt, 1e-9),
+            "decode_steps": self.decode_steps,
+            "ttft_ms_p50": _pct(ttfts, 50) * 1e3,
+            "ttft_ms_p99": _pct(ttfts, 99) * 1e3,
+            "tpot_ms_p50": _pct(tpots, 50) * 1e3,
+            "tpot_ms_p99": _pct(tpots, 99) * 1e3,
+            "latency_ms_p50": _pct(lats, 50) * 1e3,
+            "latency_ms_p99": _pct(lats, 99) * 1e3,
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        return (f"served {s['requests']} requests, {s['tokens']} tokens in "
+                f"{s['seconds']:.2f}s -> {s['tok_per_s']:.1f} tok/s | "
+                f"TTFT p50 {s['ttft_ms_p50']:.1f}ms "
+                f"p99 {s['ttft_ms_p99']:.1f}ms | "
+                f"TPOT p50 {s['tpot_ms_p50']:.2f}ms "
+                f"p99 {s['tpot_ms_p99']:.2f}ms | "
+                f"latency p99 {s['latency_ms_p99']:.1f}ms")

@@ -1,0 +1,46 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+``sample`` is pure and shape-stable, so it lives INSIDE the jitted
+prefill/decode steps — the sampled token never round-trips to the host
+(device-side token feedback, DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    top_p: float = 1.0           # 1 => disabled
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample(logits: jnp.ndarray, rng: jnp.ndarray,
+           sp: SamplingParams) -> jnp.ndarray:
+    """logits: [B, V] -> tokens [B] int32. ``sp`` is static (closed over
+    at trace time), so disabled filters compile to nothing."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[:, -sp.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sp.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]          # descending
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p (always
+        # keep the first token); cutoff = logit of the last kept entry
+        keep = cum - probs < sp.top_p
+        cutoff = jnp.min(jnp.where(keep, sorted_l, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

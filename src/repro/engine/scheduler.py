@@ -1,0 +1,138 @@
+"""Task-centric continuous-batching scheduler (DESIGN.md §3.3).
+
+Request lifecycle::
+
+    QUEUED --admit--> PREFILL --first token--> DECODE --budget--> FINISHED
+              ^                                           |
+              '------------- slot + pages freed ----------'
+
+Admission is strict FIFO: the head of the queue is admitted as soon as a
+slot AND its full page reservation (prompt + generation budget) are
+available; if the head doesn't fit, nothing behind it jumps ahead
+(no head-of-line bypass — arrival order is the service order, pinned by a
+regression test). Slots are evicted and refilled without stopping the
+decode loop: the other slots keep decoding through every admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.engine.kv_cache import PagedKVCache
+
+QUEUED, PREFILL, DECODE, FINISHED = "queued", "prefill", "decode", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [prompt_len] int32
+    max_new_tokens: int
+    state: str = QUEUED
+    slot: Optional[int] = None
+    produced: int = 0                  # generated tokens (incl. prefill's)
+    output: Optional[np.ndarray] = None
+    # indices into the engine's device-side token log (one per token)
+    log_entries: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        """Worst-case KV footprint: prompt + full generation budget."""
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class Slot:
+    request: Optional[Request] = None
+    position: int = 0                  # next KV write position
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Scheduler:
+    def __init__(self, num_slots: int, kv: PagedKVCache, max_seq: int):
+        self.kv = kv
+        self.max_seq = max_seq
+        self.slots: List[Slot] = [Slot() for _ in range(num_slots)]
+        self.waiting: Deque[Request] = deque()
+        self._ids = itertools.count()
+        self.admission_order: List[int] = []   # rids, in service order
+        self.finished: List[Request] = []
+
+    # -- queue side ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        req = Request(rid=next(self._ids),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=int(max_new_tokens))
+        if req.total_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {req.total_tokens} "
+                f"exceeds max_seq {self.max_seq}")
+        self.waiting.append(req)               # FIFO: append at the tail...
+        return req.rid
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(not s.free for s in self.slots)
+
+    # -- slot side ----------------------------------------------------------
+
+    def admit(self) -> List[Request]:
+        """Move queue-head requests into free slots while pages last.
+
+        Returns the newly admitted requests (state PREFILL, slot set).
+        Stops at the first request that doesn't fit — FIFO order is the
+        service order, so nothing bypasses a blocked head (backpressure).
+        """
+        admitted: List[Request] = []
+        free_slots = [i for i, s in enumerate(self.slots) if s.free]
+        while self.waiting and free_slots:
+            head = self.waiting[0]             # ...and serve from the head
+            if not self.kv.can_admit(head.total_tokens):
+                break                          # out-of-pages backpressure
+            self.waiting.popleft()
+            slot = free_slots.pop(0)
+            self.kv.assign(slot, head.total_tokens)
+            head.state = PREFILL
+            head.slot = slot
+            self.slots[slot].request = head
+            self.slots[slot].position = head.prompt_len
+            self.admission_order.append(head.rid)
+            admitted.append(head)
+        return admitted
+
+    def active(self) -> List[Request]:
+        return [s.request for s in self.slots if not s.free]
+
+    def step_decoded(self) -> List[Request]:
+        """Account one decode token for every active slot; returns requests
+        that just hit their budget (still occupying their slot)."""
+        done = []
+        for s in self.slots:
+            if s.free:
+                continue
+            r = s.request
+            r.produced += 1
+            s.position += 1
+            if r.produced >= r.max_new_tokens or s.position >= self.max_seq:
+                done.append(r)
+        return done
+
+    def finish(self, req: Request) -> None:
+        """Evict: free the slot + pages; the loop refills via admit()."""
+        slot = req.slot
+        self.kv.release(slot)
+        self.slots[slot].request = None
+        self.slots[slot].position = 0
+        req.state = FINISHED
+        self.finished.append(req)

@@ -1,11 +1,13 @@
-"""Batched serving loop with GQSA-compressed weights.
+"""Serving CLI: a thin wrapper over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama2_7b --reduced \
         --compress gqsa --requests 16 --max-new 32
 
-Continuous-batching-lite: a fixed pool of batch slots; each slot runs one
-request; finished requests (EOS-by-length) are swapped for queued ones
-without stopping the decode loop. Reports tokens/s + per-phase latency.
+Requests are admitted in FIFO arrival order into a fixed pool of batch
+slots backed by a paged KV cache; prompts are prefilled in one batched
+flash-attention call (no one-token-per-step prompt feeding) and decode
+runs one fused per-slot-position step with device-side token feedback.
+Reports tokens/s, TTFT, TPOT and p50/p99 latency (repro.engine).
 """
 from __future__ import annotations
 
@@ -14,7 +16,6 @@ import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
@@ -22,12 +23,32 @@ from repro.core.gqs_layer import GQSAConfig
 from repro.core.model_compress import (compress_params, compress_params_w4)
 from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
+from repro.engine import EngineConfig, InferenceEngine, SamplingParams
 from repro.models.registry import get_model
 
 
 def make_requests(n, vocab, rng, lo=4, hi=16):
     lens = rng.integers(lo, hi, size=n)
     return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
+
+
+def compressed_params(cfg, args, rng):
+    api = get_model(cfg)
+    params = api.init_params(rng, cfg)
+    t0 = time.time()
+    if args.compress == "gqsa":
+        gqsa = GQSAConfig(
+            quant=QuantConfig(bits=4, group_size=args.group_size),
+            prune=PruneConfig(sparsity=args.sparsity,
+                              group_size=args.group_size))
+        params = compress_params(params, cfg, gqsa)
+        print(f"packed GQSA W4 S{int(args.sparsity*100)}% "
+              f"G{args.group_size} in {time.time()-t0:.1f}s")
+    elif args.compress == "w4":
+        params = compress_params_w4(params, cfg, QuantConfig(
+            bits=4, group_size=args.group_size))
+        print(f"packed W4 in {time.time()-t0:.1f}s")
+    return params
 
 
 def main(argv=None):
@@ -42,83 +63,49 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="KV page pool size (default: slots*max_seq worth)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    api = get_model(cfg)
     rng = jax.random.PRNGKey(args.seed)
-    params = api.init_params(rng, cfg)
+    params = compressed_params(cfg, args, rng)
 
-    t0 = time.time()
-    if args.compress == "gqsa":
-        gqsa = GQSAConfig(
-            quant=QuantConfig(bits=4, group_size=args.group_size),
-            prune=PruneConfig(sparsity=args.sparsity,
-                              group_size=args.group_size))
-        params = compress_params(params, cfg, gqsa)
-        print(f"packed GQSA W4 S{int(args.sparsity*100)}% "
-              f"G{args.group_size} in {time.time()-t0:.1f}s")
-    elif args.compress == "w4":
-        params = compress_params_w4(params, cfg, QuantConfig(
-            bits=4, group_size=args.group_size))
-        print(f"packed W4 in {time.time()-t0:.1f}s")
+    engine = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
+                     page_size=args.page_size, num_pages=args.num_pages,
+                     use_pallas=args.use_pallas, seed=args.seed),
+        SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                       top_p=args.top_p))
 
     nprng = np.random.default_rng(args.seed)
-    queue: List[np.ndarray] = make_requests(args.requests, cfg.vocab, nprng)
-    slots = args.slots
-    cache = api.init_cache(cfg, slots, args.max_seq)
+    # prompts must leave room for the generation budget within max_seq
+    maxlen = args.max_seq - args.max_new
+    if maxlen < 1:
+        ap.error(f"--max-new {args.max_new} leaves no prompt room within "
+                 f"--max-seq {args.max_seq}")
+    lo = min(4, maxlen)
+    hi = max(lo + 1, min(16, maxlen + 1))
+    prompts: List[np.ndarray] = make_requests(args.requests, cfg.vocab,
+                                              nprng, lo=lo, hi=hi)
+    for p in prompts:
+        engine.submit(p, args.max_new)
+    out = engine.run()
 
-    @jax.jit
-    def decode(params, cache, tokens, pos):
-        logits, cache = api.decode_step(params, cache, tokens, pos, cfg)
-        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), cache
-
-    # slot state
-    active = [None] * slots          # request prompt or None
-    produced = [0] * slots
-    outputs = []
-    tokens = jnp.zeros((slots, 1), jnp.int32)
-    t_start = time.time()
-    n_tokens = 0
-    pos = 0
-
-    def refill(slot):
-        nonlocal tokens
-        if queue:
-            req = queue.pop()
-            active[slot] = req
-            produced[slot] = 0
-            # feed the prompt one token per step (shared-pos simple scheduler)
-            tokens = tokens.at[slot, 0].set(int(req[0]))
-
-    for s in range(slots):
-        refill(s)
-
-    while any(a is not None for a in active) and pos < args.max_seq - 1:
-        next_tok, cache = decode(params, cache, tokens, jnp.int32(pos))
-        pos += 1
-        for s in range(slots):
-            if active[s] is None:
-                continue
-            req = active[s]
-            if pos < len(req):               # still feeding the prompt
-                tokens = tokens.at[s, 0].set(int(req[pos]))
-            else:
-                tokens = tokens.at[s, 0].set(int(next_tok[s]))
-                produced[s] += 1
-                n_tokens += 1
-                if produced[s] >= args.max_new:
-                    outputs.append((len(req), produced[s]))
-                    active[s] = None
-                    refill(s)
-
-    dt = time.time() - t_start
-    print(f"served {len(outputs)} requests, {n_tokens} new tokens "
-          f"in {dt:.2f}s -> {n_tokens/max(dt,1e-9):.1f} tok/s "
-          f"({slots} slots, pos<={pos})")
-    return {"requests": len(outputs), "tokens": n_tokens, "seconds": dt,
-            "tok_per_s": n_tokens / max(dt, 1e-9)}
+    m = out["metrics"]
+    print(engine.metrics.format_summary()
+          + f" ({args.slots} slots, {m['decode_steps']} decode steps)")
+    # legacy result keys (kept stable for tests + examples)
+    return dict(m, requests=int(m["requests"]), tokens=int(m["tokens"]),
+                results=out["results"])
 
 
 if __name__ == "__main__":

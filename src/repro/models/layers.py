@@ -439,23 +439,33 @@ def attention_block_sp(p: Dict, x: jnp.ndarray, cfg, *, causal=True,
 def attention_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
                      cfg, use_pallas=False) -> Tuple[jnp.ndarray, Dict]:
     """x: [B, 1, d]; cache: {k: [B, S, KH, D], v: ...} (+k_scale/v_scale for
-    the int8 cache); pos: [] step index."""
+    the int8 cache); pos: [] shared step index or [B] per-slot positions
+    (continuous batching: every slot decodes at its own depth)."""
     b = x.shape[0]
     h, khn, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    per_slot = jnp.ndim(pos) == 1
+    if per_slot:
+        positions = pos[:, None].astype(jnp.int32)
+        slot = jnp.arange(b)
+
+        def write3(buf, new):            # [B, S, ...] <- [B, 1, ...]
+            return buf.at[slot, pos].set(new[:, 0].astype(buf.dtype))
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+
+        def write3(buf, new):
+            start = (0, pos) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), start)
     q, k, v = attn_qkv(p, x, positions, cfg, use_pallas)
     if "k_scale" in cache:   # int8 KV cache
         k_i8, k_sc = quantize_kv(k)
         v_i8, v_sc = quantize_kv(v)
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_i8,
-                                               (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_i8,
-                                               (0, pos, 0, 0))
-        k_scale = jax.lax.dynamic_update_slice(cache["k_scale"], k_sc,
-                                               (0, pos, 0))
-        v_scale = jax.lax.dynamic_update_slice(cache["v_scale"], v_sc,
-                                               (0, pos, 0))
-        if use_pallas:
+        k_cache = write3(cache["k"], k_i8)
+        v_cache = write3(cache["v"], v_i8)
+        k_scale = write3(cache["k_scale"], k_sc)
+        v_scale = write3(cache["v_scale"], v_sc)
+        if use_pallas and not per_slot:
             from repro.kernels import ops as kops
             r = h // khn
             o = kops.kv_decode_attention(
@@ -468,13 +478,61 @@ def attention_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
         y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
         return y, {"k": k_cache, "v": v_cache, "k_scale": k_scale,
                    "v_scale": v_scale}
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    k_cache = write3(cache["k"], k)
+    v_cache = write3(cache["v"], v)
     o = decode_attention(q, k_cache, v_cache, pos + 1)
     y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
     return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
+                           block_tables: jnp.ndarray, positions: jnp.ndarray,
+                           cfg, use_pallas=False
+                           ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step against a *paged* KV cache (one layer's view).
+
+    x: [B, 1, d]; positions: [B] write position per slot; block_tables:
+    [B, MP] page ids (entries == n_pages are out-of-range sentinels:
+    scatter-writes to them are dropped, gather-reads clip and get masked
+    by the per-slot length). cache: {"k_pages"/"v_pages": [P, ps, KH, D]}
+    (+ "k_scale_pages"/"v_scale_pages" [P, ps, KH] for int8).
+    """
+    b = x.shape[0]
+    kp = cache["k_pages"]
+    page_size = kp.shape[1]
+    q, k, v = attn_qkv(p, x, positions[:, None].astype(jnp.int32), cfg,
+                       use_pallas)
+    page = jnp.take_along_axis(block_tables,
+                               (positions // page_size)[:, None],
+                               axis=1)[:, 0]
+    off = positions % page_size
+    length = positions + 1
+
+    def write(buf, new):                 # [P, ps, ...] <- [B, ...]
+        return buf.at[page, off].set(new.astype(buf.dtype))
+
+    def view(buf):                       # [P, ps, ...] -> [B, MP*ps, ...]
+        g = buf[block_tables]            # OOB sentinel pages clip (masked)
+        return g.reshape((b, -1) + buf.shape[2:])
+
+    if "k_scale_pages" in cache:         # int8 paged cache
+        k_i8, k_sc = quantize_kv(k)
+        v_i8, v_sc = quantize_kv(v)
+        new = {"k_pages": write(kp, k_i8[:, 0]),
+               "v_pages": write(cache["v_pages"], v_i8[:, 0]),
+               "k_scale_pages": write(cache["k_scale_pages"], k_sc[:, 0]),
+               "v_scale_pages": write(cache["v_scale_pages"], v_sc[:, 0])}
+        o = decode_attention_int8(q, view(new["k_pages"]),
+                                  view(new["k_scale_pages"]),
+                                  view(new["v_pages"]),
+                                  view(new["v_scale_pages"]), length)
+    else:
+        new = {"k_pages": write(kp, k[:, 0]),
+               "v_pages": write(cache["v_pages"], v[:, 0])}
+        o = decode_attention(q, view(new["k_pages"]), view(new["v_pages"]),
+                             length)
+    y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
+    return y, new
 
 
 # ---------------------------------------------------------------------------

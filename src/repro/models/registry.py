@@ -27,6 +27,10 @@ class ModelAPI:
     init_cache: Callable     # (cfg, batch_size, max_seq, dtype)
     decode_step: Callable    # (params, cache, tokens, pos, cfg, dist, ...)
     prime_cache: Optional[Callable] = None   # encdec cross-KV fill
+    # continuous-batching engine hooks (paged KV cache; engine/)
+    init_paged_cache: Optional[Callable] = None  # (cfg, n_pages, page_size)
+    prefill: Optional[Callable] = None  # (params, cache, tokens, lengths,
+    #                                      block_tables, cfg, dist, ...)
 
 
 def _tf_forward(params, batch, cfg, dist=None, use_pallas=False,
@@ -57,13 +61,19 @@ def _ssm_forward(params, batch, cfg, dist=None, use_pallas=False,
 
 _FAMILIES: Dict[str, ModelAPI] = {
     "dense": ModelAPI(transformer.init_params, _tf_forward,
-                      transformer.init_cache, transformer.decode_step),
+                      transformer.init_cache, transformer.decode_step,
+                      init_paged_cache=transformer.init_paged_cache,
+                      prefill=transformer.prefill),
     "moe": ModelAPI(transformer.init_params, _tf_forward,
-                    transformer.init_cache, transformer.decode_step),
+                    transformer.init_cache, transformer.decode_step,
+                    init_paged_cache=transformer.init_paged_cache,
+                    prefill=transformer.prefill),
     "mla_moe": ModelAPI(transformer.init_params, _tf_forward,
                         transformer.init_cache, transformer.decode_step),
     "vlm": ModelAPI(transformer.init_params, _tf_forward,
-                    transformer.init_cache, transformer.decode_step),
+                    transformer.init_cache, transformer.decode_step,
+                    init_paged_cache=transformer.init_paged_cache,
+                    prefill=transformer.prefill),
     "encdec": ModelAPI(encdec.init_params, _encdec_forward,
                        encdec.init_cache, encdec.decode_step,
                        prime_cache=encdec.prime_cross_cache),

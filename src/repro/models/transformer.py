@@ -160,16 +160,117 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Dict:
                            dtype)}
 
 
+def init_paged_cache(cfg, num_pages: int, page_size: int,
+                     dtype=None) -> Dict:
+    """Paged KV pool: fixed-size pages shared by all slots via per-request
+    block tables (see DESIGN.md §3). Leaves are [L, P, ps, ...] so the
+    decode scan hands each layer its [P, ps, ...] view."""
+    if cfg.family == "mla_moe":
+        raise NotImplementedError("paged cache: MLA latent cache not "
+                                  "supported yet; use init_cache")
+    dtype = dtype or cfg.compute_dtype
+    lyr, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        return {"k_pages": jnp.zeros((lyr, num_pages, page_size, kh, hd),
+                                     jnp.int8),
+                "v_pages": jnp.zeros((lyr, num_pages, page_size, kh, hd),
+                                     jnp.int8),
+                "k_scale_pages": jnp.zeros((lyr, num_pages, page_size, kh),
+                                           jnp.float32),
+                "v_scale_pages": jnp.zeros((lyr, num_pages, page_size, kh),
+                                           jnp.float32)}
+    return {"k_pages": jnp.zeros((lyr, num_pages, page_size, kh, hd), dtype),
+            "v_pages": jnp.zeros((lyr, num_pages, page_size, kh, hd), dtype)}
+
+
+def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
+            lengths: jnp.ndarray, block_tables: jnp.ndarray, cfg,
+            dist=None, use_pallas: bool = False
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """True batched prefill: run the full (padded) prompts through flash
+    attention ONCE and scatter every layer's K/V into the paged cache.
+
+    tokens: [B, S] right-padded prompts; lengths: [B] valid prefix;
+    block_tables: [B, MP] page ids. Padding positions map to the
+    out-of-range page sentinel, so their K/V scatter-writes are dropped;
+    causality keeps valid tokens from attending to the (trailing) padding.
+    Returns (last-valid-token logits [B, 1, V], filled cache).
+    """
+    b, s = tokens.shape
+    kp = cache["k_pages"]
+    num_pages, page_size = kp.shape[1], kp.shape[2]
+    h = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    # (b, s) -> flat page/offset; invalid (padding) positions -> OOB page
+    page = jnp.take_along_axis(
+        block_tables, positions // page_size, axis=1)       # [B, S]
+    page = jnp.where(positions < lengths[:, None], page, num_pages)
+    off = positions % page_size
+    int8 = "k_scale_pages" in cache
+
+    def body(carry, xs):
+        hh = carry
+        lp, lc = xs
+        hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], hn, positions, cfg, use_pallas)
+        o = L.flash_attention(q, k, v, causal=True,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k,
+                              unroll=cfg.analysis_unroll)
+        a = apply_linear(lp["attn"]["wo"], o.reshape(b, s, -1),
+                         use_pallas=use_pallas)
+        hh = hh + a
+        hn = L.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            m, _ = MOE.moe_block(lp["moe"], hn, cfg, dist, use_pallas)
+        else:
+            m = L.mlp_block(lp["mlp"], hn, cfg.mlp_type, use_pallas)
+        if int8:
+            k_i8, k_sc = L.quantize_kv(k)
+            v_i8, v_sc = L.quantize_kv(v)
+            new_c = {
+                "k_pages": lc["k_pages"].at[page, off].set(k_i8),
+                "v_pages": lc["v_pages"].at[page, off].set(v_i8),
+                "k_scale_pages":
+                    lc["k_scale_pages"].at[page, off].set(k_sc),
+                "v_scale_pages":
+                    lc["v_scale_pages"].at[page, off].set(v_sc)}
+        else:
+            new_c = {
+                "k_pages": lc["k_pages"].at[page, off].set(
+                    k.astype(lc["k_pages"].dtype)),
+                "v_pages": lc["v_pages"].at[page, off].set(
+                    v.astype(lc["v_pages"].dtype))}
+        return hh + m, new_c
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    # logits only at each row's last valid token (cheap unembed: [B, 1, V])
+    h_last = jnp.take_along_axis(
+        h, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+    logits = unembed(params, h_last, cfg)
+    return logits, new_cache
+
+
 def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
-                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False
-                ) -> Tuple[jnp.ndarray, Dict]:
-    """tokens: [B, 1]; pos: scalar step index. Returns (logits, new cache)."""
+                pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False,
+                block_tables=None) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: [B, 1]; pos: scalar shared step index OR [B] per-slot
+    positions. ``cache`` is either the contiguous cache from
+    :func:`init_cache` or the paged view from :func:`init_paged_cache`
+    (then ``block_tables`` [B, MP] is required). Returns (logits, cache)."""
+    paged = isinstance(cache, dict) and "k_pages" in cache
+    if paged and block_tables is None:
+        raise ValueError("paged cache decode requires block_tables")
     h = embed_tokens(params, tokens, cfg)
 
     def body(hh, xs):
         lp, lc = xs
         hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
-        if cfg.family == "mla_moe":
+        if paged:
+            a, new_c = L.attention_decode_paged(lp["attn"], hn, lc,
+                                                block_tables, pos, cfg,
+                                                use_pallas)
+        elif cfg.family == "mla_moe":
             a, new_c = MLA.mla_decode(lp["attn"], hn, lc, pos, cfg,
                                       use_pallas)
         else:

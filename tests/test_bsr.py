@@ -2,7 +2,11 @@
 compression accounting, work-list coverage (paper §3.2, §3.5)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; the rest of the file runs
+    from _hyp import given, settings, st
 
 from repro.core.bsr import (BSRMatrix, build_work_list, pack_dense,
                             pack_quantized, paper_bsr_nbytes, to_dense,

@@ -1,7 +1,10 @@
 """Group-pruning invariants (paper §3.2) + saliency sanity."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; the rest of the file runs
+    from _hyp import given, settings, st
 
 from repro.core.pruning import (PruneConfig, group_mask,
                                 groups_kept_per_row, mask_sparsity,

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; the rest of the file runs
+    from _hyp import given, settings, st
 
 from repro.core.quant import (QuantConfig, dequantize, fake_quant,
                               group_minmax_params, int8_symmetric_dequant,
