@@ -33,17 +33,32 @@ BENCH_CFG = ModelConfig(
     d_ff=352, vocab=256,
     dtype="float32", attn_block_q=64, attn_block_k=64, remat=False)
 
+# serving-regime benchmark LM for speculative decoding: small enough
+# that a decode step is dispatch/op-bound rather than FLOP-bound (the
+# regime the engine targets — at real sizes decode is DMA-bound on TPU,
+# which tiny CPU models emulate via per-op overhead, not GEMM time), and
+# deep enough that a depth-pruned draft profile (first layer only) is a
+# genuinely cheaper model. Trained with a LayerSkip-style dual-exit
+# loss so the shallow exit of the SAME checkpoint drafts accurately.
+SPEC_BENCH_CFG = ModelConfig(
+    name="bench-spec-llama", family="dense",
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=176, vocab=256,
+    dtype="float32", attn_block_q=64, attn_block_k=64, remat=False)
+SPEC_EXIT_LAYER = 1            # the draft profile's depth (w4l12 on 8 layers)
+SPEC_EXIT_WEIGHT = 0.5
+
 SEQ = 64
 BATCH = 16
 TRAIN_STEPS = 1500
 
 
-def trained_tiny_model(steps: int = TRAIN_STEPS):
-    """Train (or load cached) the benchmark LM. Returns (cfg, params)."""
-    cfg = BENCH_CFG
+def trained_tiny_model(steps: int = TRAIN_STEPS, cfg: ModelConfig = BENCH_CFG,
+                       cache: str = "model"):
+    """Train (or load cached) a benchmark LM. Returns (cfg, params)."""
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    ckpt = CheckpointManager(str(BENCH_DIR / "model"), async_save=False)
+    ckpt = CheckpointManager(str(BENCH_DIR / cache), async_save=False)
     if ckpt.latest_step() == steps:
         return cfg, ckpt.restore(params, steps)
     step = jax.jit(build_train_step(
@@ -55,6 +70,64 @@ def trained_tiny_model(steps: int = TRAIN_STEPS):
         batch = {k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
         params, opt, m = step(params, opt, batch)
     print(f"# trained bench model: final loss {float(m['loss']):.4f}")
+    ckpt.save(steps, params)
+    return cfg, params
+
+
+def trained_spec_model(steps: int = TRAIN_STEPS):
+    """Train (or load cached) the speculative-decoding benchmark LM.
+
+    Same corpus as :func:`trained_tiny_model`, but the loss is dual-exit
+    (LayerSkip-style): CE at the final layer + SPEC_EXIT_WEIGHT * CE at
+    SPEC_EXIT_LAYER through the SHARED final norm + unembedding. One
+    checkpoint then yields both the serving target (all layers, GQSA
+    W4S50) and an accurate shallow drafter (first SPEC_EXIT_LAYER
+    layers — draft profile w4l12 on the 8-layer config) — depth pruning
+    as the draft's structured sparsity. Returns (cfg, params).
+    """
+    import repro.models.transformer as T
+    from repro.models.registry import lm_loss
+
+    cfg = SPEC_BENCH_CFG
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ckpt = CheckpointManager(str(BENCH_DIR / "spec_model"), async_save=False)
+    if ckpt.latest_step() == steps:
+        return cfg, ckpt.restore(params, steps)
+
+    def loss_fn(p, batch):
+        h = T.embed_tokens(p, batch["tokens"], cfg)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(hh, lp):
+            hh, _ = T._block(lp, hh, positions, cfg, None, False)
+            return hh, hh
+
+        h_final, h_all = jax.lax.scan(body, h, p["layers"])
+        h_exit = h_all[SPEC_EXIT_LAYER - 1]
+        loss = lm_loss(T.unembed(p, h_final, cfg), batch["labels"])
+        loss_e = lm_loss(T.unembed(p, h_exit, cfg), batch["labels"])
+        return loss + SPEC_EXIT_WEIGHT * loss_e, (loss, loss_e)
+
+    lr_fn = warmup_cosine(6e-3, 50, steps)
+    ocfg = adamw.AdamWConfig(lr=6e-3)
+
+    @jax.jit
+    def step(p, opt, batch):
+        (_, (loss, loss_e)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch)
+        p, opt, _ = adamw.apply_updates(p, grads, opt, ocfg,
+                                        lr_fn(opt["step"]))
+        return p, opt, loss, loss_e
+
+    opt = adamw.init_state(params)
+    data = SyntheticLM(cfg.vocab, SEQ, BATCH, seed=0)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.host_batch(i).items()}
+        params, opt, loss, loss_e = step(params, opt, batch)
+    print(f"# trained spec bench model: final loss {float(loss):.4f}, "
+          f"exit-layer-{SPEC_EXIT_LAYER} loss {float(loss_e):.4f}")
     ckpt.save(steps, params)
     return cfg, params
 
@@ -95,5 +168,37 @@ def time_call(fn, *args, warmup=2, iters=5) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived: str):
+_EMITTED: dict = {}
+
+
+def emit(name: str, us_per_call: float, derived: str, **metrics):
+    """CSV line to stdout + an in-memory record for :func:`write_bench_json`.
+
+    ``metrics`` are machine-readable extras (tok_per_s, ttft_ms_p50,
+    acceptance_rate, ...) so the perf trajectory is comparable across PRs
+    without parsing the human-oriented ``derived`` string.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    _EMITTED[name] = {"us_per_call": round(float(us_per_call), 1),
+                      "derived": derived,
+                      **{k: (round(float(v), 4)
+                             if isinstance(v, float) else v)
+                         for k, v in metrics.items()}}
+
+
+def write_bench_json(filename: str = "BENCH_serve.json") -> Path:
+    """Write every emitted record to ``<repo root>/<filename>`` (merging
+    with an existing file, so serve benchmarks that run separately build
+    up one tracked snapshot)."""
+    import json
+    path = Path(__file__).resolve().parent.parent / filename
+    merged = {}
+    if path.exists():
+        try:
+            merged = json.loads(path.read_text())
+        except (ValueError, OSError):
+            merged = {}
+    merged.update(_EMITTED)
+    path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {len(_EMITTED)} benchmark records -> {path}")
+    return path

@@ -26,9 +26,9 @@ from repro.launch.serve import compressed_params, make_requests
 from repro.models.registry import get_model
 
 try:
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_bench_json
 except ImportError:      # direct `python benchmarks/serve_engine.py` run
-    from common import emit
+    from common import emit, write_bench_json
 
 
 def seed_loop(cfg, params, prompts: List[np.ndarray], slots: int,
@@ -129,14 +129,19 @@ def main(argv=None):
         speedups.append(speedup)
         emit(f"serve_seed_loop_{comp}",
              seed["seconds"] * 1e6 / max(seed["tokens"], 1),
-             f"{seed['tok_per_s']:.1f} tok/s")
+             f"{seed['tok_per_s']:.1f} tok/s",
+             tok_per_s=seed["tok_per_s"])
         emit(f"serve_engine_{comp}",
              eng["seconds"] * 1e6 / max(eng["tokens"], 1),
              f"{eng['tok_per_s']:.1f} tok/s ({speedup:.1f}x seed, "
              f"TTFT p50 {eng['ttft_ms_p50']:.0f}ms, "
-             f"TPOT p50 {eng['tpot_ms_p50']:.1f}ms)")
+             f"TPOT p50 {eng['tpot_ms_p50']:.1f}ms)",
+             tok_per_s=eng["tok_per_s"], speedup_vs_seed=speedup,
+             ttft_ms_p50=eng["ttft_ms_p50"],
+             tpot_ms_p50=eng["tpot_ms_p50"])
     print(f"# engine vs seed-loop speedups: "
           f"{', '.join(f'{s:.1f}x' for s in speedups)}")
+    write_bench_json()
     return speedups
 
 

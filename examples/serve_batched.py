@@ -1,25 +1,48 @@
 """Batched serving with GQSA-compressed weights through the
 continuous-batching engine: compare FP vs W4 vs GQSA-W4S50 throughput,
-TTFT and TPOT at equal slots/requests.
+TTFT and TPOT at equal slots/requests — plus the same GQSA deployment
+with self-speculative decoding (--spec K drafts per round from a second,
+more aggressively compressed cut of the same checkpoint; the multi-token
+verify keeps the output token-for-token identical to plain GQSA serving).
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py [--spec 4]
+    PYTHONPATH=src python examples/serve_batched.py --spec 4 \
+        --draft-profile w4s75
 """
+import argparse
+
 from repro.launch import serve
 
 
-def main():
-    results = {}
-    for comp in ("none", "w4", "gqsa"):
-        print(f"\n=== compress={comp} ===")
-        results[comp] = serve.main([
-            "--arch", "llama2_7b", "--reduced", "--compress", comp,
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", type=int, default=4,
+                    help="draft length K for the speculative run (0: skip)")
+    ap.add_argument("--draft-profile", default="w4",
+                    help="draft compression profile for the speculative run")
+    args = ap.parse_args(argv)
+
+    base = ["--arch", "llama2_7b", "--reduced",
             "--requests", "6", "--slots", "3", "--max-new", "8",
-            "--max-seq", "48", "--page-size", "8"])
+            "--max-seq", "48", "--page-size", "8"]
+    runs = [("none", []), ("w4", []), ("gqsa", [])]
+    if args.spec > 0:
+        runs.append(("gqsa", ["--spec", str(args.spec),
+                              "--draft-profile", args.draft_profile]))
+
+    results = {}
+    for comp, extra in runs:
+        label = comp if not extra else f"{comp}+spec{args.spec}"
+        print(f"\n=== compress={label} ===")
+        results[label] = serve.main(base + ["--compress", comp] + extra)
     print("\nsummary (CPU wall-clock; on TPU the GQSA bytes win dominates):")
-    for comp, r in results.items():
-        print(f"  {comp:5s}: {r['tok_per_s']:6.1f} tok/s | "
-              f"TTFT p50 {r['ttft_ms_p50']:7.1f}ms | "
-              f"TPOT p50 {r['tpot_ms_p50']:6.2f}ms")
+    for label, r in results.items():
+        line = (f"  {label:10s}: {r['tok_per_s']:6.1f} tok/s | "
+                f"TTFT p50 {r['ttft_ms_p50']:7.1f}ms | "
+                f"TPOT p50 {r['tpot_ms_p50']:6.2f}ms")
+        if r.get("spec_rounds"):
+            line += f" | acceptance {r['acceptance_rate']:.0%}"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,14 @@ def list_archs(include_extra: bool = False) -> List[str]:
     return ARCH_IDS if include_extra else ARCH_IDS[:-1]
 
 
+def list_draft_profiles() -> List[str]:
+    """Draft compression profiles for speculative decoding (the serving
+    CLIs' --draft-profile choices). Lazy import: configs stay importable
+    without the compression stack."""
+    from repro.core.model_compress import DRAFT_PROFILES
+    return sorted(DRAFT_PROFILES)
+
+
 def supported_shapes(cfg: ModelConfig) -> List[str]:
     out = ["train_4k", "prefill_32k", "decode_32k"]
     if cfg.supports_long_context:

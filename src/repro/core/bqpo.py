@@ -182,7 +182,7 @@ def bqpo(params: Dict, token_batches: List[jnp.ndarray], cfg,
     """Stage 1 over the whole (dense-family) model.
 
     Returns params with every block converted to fake-quant and optimized.
-    Embeddings / lm_head stay FP (deployment convention, DESIGN.md §4).
+    Embeddings / lm_head stay FP (deployment convention, DESIGN.md §6).
     """
     bcfg = bcfg or BQPOConfig()
     n_layers = cfg.n_layers

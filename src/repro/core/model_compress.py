@@ -113,6 +113,73 @@ def compress_params_w4(params, cfg, qcfg: QuantConfig):
     return _walk(params, "", fn)
 
 
+# ---------------------------------------------------------------------------
+# Draft profiles (speculative decoding, DESIGN.md §4): one FP checkpoint
+# yields BOTH the deployed target compression and a more aggressive draft
+# compression. Quality collapse at draft-level settings is fine — the
+# engine's verify step makes the served distribution exactly the target's,
+# so the draft profile only trades acceptance rate against draft cost.
+# ---------------------------------------------------------------------------
+
+DRAFT_PROFILES: Dict[str, Dict] = {
+    # dense 4-bit (no pruning): near-target quality, highest acceptance
+    "w4": dict(bits=4, sparsity=0.0),
+    # the paper's deployed setting — as a draft it accepts ~everything
+    "w4s50": dict(bits=4, sparsity=0.5),
+    # aggressive: settings the paper shows degrade too much to SERVE,
+    # which is exactly what a drafter is allowed to be
+    "w4s75": dict(bits=4, sparsity=0.75),
+    "w2s50": dict(bits=2, sparsity=0.5),
+    "w2s75": dict(bits=2, sparsity=0.75),
+    # depth-pruned (LayerSkip-style self-speculation): keep the first
+    # 12.5% / 25% / 50% of layers — sparsity at LAYER granularity, the
+    # knob that makes a draft step structurally cheaper in every cost
+    # regime (the shallow exit shares the final norm + unembedding)
+    "w4l12": dict(bits=4, sparsity=0.0, depth=0.125),
+    "w4l25": dict(bits=4, sparsity=0.0, depth=0.25),
+    "w4l50": dict(bits=4, sparsity=0.0, depth=0.5),
+    "w4s50l50": dict(bits=4, sparsity=0.5, depth=0.5),
+}
+
+
+def draft_layers(cfg, profile: str) -> int:
+    """Effective drafter depth for a profile (>= 1, full when no depth)."""
+    try:
+        spec = DRAFT_PROFILES[profile]
+    except KeyError:
+        raise ValueError(f"unknown draft profile {profile!r}; "
+                         f"known: {sorted(DRAFT_PROFILES)}")
+    depth = spec.get("depth", 1.0)
+    return max(1, int(round(cfg.n_layers * depth)))
+
+
+def compress_draft(params, cfg, profile: str = "w4s75",
+                   group_size: int = 16,
+                   stats: Optional[Dict[str, HessianStats]] = None):
+    """FP param tree -> the draft-profile parameter set.
+
+    ``params`` is the SAME checkpoint the target compression starts
+    from. Depth profiles first truncate the stacked layer leaves to the
+    profile's layer count (embed / final norm / lm_head stay shared);
+    then sparsity 0 routes to the dense W4 packer, anything else to the
+    full GQSA packer at the profile's (bits, sparsity). A depth-pruned
+    draft must be RUN at ``draft_layers(cfg, profile)`` layers
+    (the engine's ``EngineConfig.spec_draft_layers``).
+    """
+    dl = draft_layers(cfg, profile)          # validates the profile name
+    spec = DRAFT_PROFILES[profile]
+    if dl < cfg.n_layers:
+        params = dict(params, layers=jax.tree_util.tree_map(
+            lambda l: l[:dl], params["layers"]))
+    if spec["sparsity"] <= 0.0:
+        return compress_params_w4(params, cfg, QuantConfig(
+            bits=spec["bits"], group_size=group_size))
+    gqsa = GQSAConfig(
+        quant=QuantConfig(bits=spec["bits"], group_size=group_size),
+        prune=PruneConfig(sparsity=spec["sparsity"], group_size=group_size))
+    return compress_params(params, cfg, gqsa, stats=stats)
+
+
 def compress_params_shapes(params_template, cfg, gqsa: GQSAConfig):
     """ShapeDtypeStruct version for the dry-run (no data, no loops)."""
     def fn(pstr, node):

@@ -11,9 +11,9 @@ on top of the GQSA-compressed model zoo::
 from repro.engine.engine import EngineConfig, InferenceEngine
 from repro.engine.kv_cache import PageAllocator, PagedKVCache
 from repro.engine.metrics import EngineMetrics
-from repro.engine.sampling import SamplingParams, sample
+from repro.engine.sampling import SamplingParams, sample, spec_verify
 from repro.engine.scheduler import Request, Scheduler
 
 __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "PagedKVCache", "EngineMetrics", "SamplingParams", "sample",
-           "Request", "Scheduler"]
+           "spec_verify", "Request", "Scheduler"]

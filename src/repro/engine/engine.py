@@ -10,6 +10,12 @@ host control flow needs no per-step sync: the loop dispatches a whole
 decode *segment* (until the earliest active request exhausts its budget)
 and blocks once at the segment boundary, which is also where timestamps
 are taken and slots are evicted/refilled.
+
+With ``spec_k > 0`` the segment interleaves draft/verify *rounds*
+instead of single-token steps (self-speculative decoding, DESIGN.md §4):
+a fused K-step greedy draft call with the aggressively-compressed draft
+parameter set, then one multi-token verify call that emits 1..K+1 tokens
+per slot. Budgets are clamped on device, so segments stay sync-free.
 """
 from __future__ import annotations
 
@@ -37,6 +43,14 @@ class EngineConfig:
     prompt_bucket_min: int = 8        # prefill pad bucket floor (pow2 above)
     use_pallas: bool = False
     seed: int = 0
+    # speculative decoding: draft K tokens per round with the (separately
+    # compressed) draft parameter set, verify all K in one multi-token
+    # target step. 0 disables; > 0 requires draft_params at engine
+    # construction (engine/spec/, DESIGN.md §4). spec_draft_layers: the
+    # drafter's depth for depth-pruned draft profiles (None = full depth;
+    # must match core.model_compress.draft_layers of the profile used).
+    spec_k: int = 0
+    spec_draft_layers: Optional[int] = None
 
 
 def _bucket(n: int, lo: int) -> int:
@@ -74,16 +88,23 @@ def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
 
 class InferenceEngine:
     def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
-                 sampling: SamplingParams = SamplingParams()):
+                 sampling: SamplingParams = SamplingParams(),
+                 draft_params=None):
         api = get_model(cfg)
         if api.prefill is None or api.init_paged_cache is None:
             raise NotImplementedError(
                 f"family {cfg.family!r} lacks prefill/paged-cache support")
+        if engine_cfg.spec_k > 0 and draft_params is None:
+            raise ValueError("spec_k > 0 requires draft_params (compress "
+                             "the same checkpoint with a draft profile: "
+                             "core.model_compress.compress_draft)")
         self.cfg = cfg
         self.params = params
+        self.draft_params = draft_params
         self.ecfg = engine_cfg
         self.sampling = sampling
         self.api = api
+        self.spec = engine_cfg.spec_k > 0
         if engine_cfg.use_pallas and cfg.kv_cache_dtype == "int8":
             import warnings
             warnings.warn(
@@ -92,7 +113,8 @@ class InferenceEngine:
                 "to the jnp reference", stacklevel=2)
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
-                               engine_cfg.num_pages)
+                               engine_cfg.num_pages,
+                               lookahead=engine_cfg.spec_k)
         self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
                                    engine_cfg.max_seq)
         self.metrics = EngineMetrics()
@@ -101,10 +123,18 @@ class InferenceEngine:
         self._tokens = jnp.zeros((b,), jnp.int32)      # device-side feedback
         self._positions = jnp.zeros((b,), jnp.int32)
         self._active = jnp.zeros((b,), jnp.int32)
+        self._remaining = jnp.zeros((b,), jnp.int32)   # per-slot budget left
         self._block_tables = self.kv.device_block_tables()
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
+        # spec mode log: (tokens [B, K+1], counts [B]) per prefill/round
+        self._spec_log: List = []
         self._prefill_fn, self._decode_fn = _step_fns(
             cfg, sampling, engine_cfg.use_pallas)
+        if self.spec:
+            from repro.engine.spec import spec_step_fns
+            self._draft_fn, self._verify_fn = spec_step_fns(
+                cfg, sampling, engine_cfg.use_pallas, engine_cfg.spec_k,
+                engine_cfg.spec_draft_layers)
 
     # -- API ----------------------------------------------------------------
 
@@ -131,23 +161,11 @@ class InferenceEngine:
                         f"{self.kv.pages_needed(head.total_tokens)} pages "
                         f"but the pool only has {self.kv.num_pages}")
                 continue
-            # decode segment: no slot can exceed its budget before the
-            # earliest one finishes, so no host sync inside the segment
-            seg = max(1, min(r.max_new_tokens - r.produced for r in actives))
-            finished: List[Request] = []
-            for _ in range(seg):
-                self._tokens, self._positions, self.kv.data, self._rng = \
-                    self._decode_fn(self.params, self.kv.data, self._tokens,
-                                    self._positions, self._block_tables,
-                                    self._active, self._rng)
-                idx = len(self._token_log)
-                self._token_log.append(self._tokens)
-                for r in sch.active():
-                    r.log_entries.append(idx)
-                finished.extend(sch.step_decoded())
-            jax.block_until_ready(self._tokens)        # segment boundary
+            if self.spec:
+                finished = self._spec_segment(actives)
+            else:
+                finished = self._decode_segment(actives)
             t = self.metrics.now()
-            self.metrics.decode_steps += seg
             for r in finished:
                 self.metrics.record_finish(r.rid, t, r.produced)
                 sch.finish(r)
@@ -156,6 +174,68 @@ class InferenceEngine:
         self.metrics.run_finished()
         return {"results": self._materialize(), "metrics":
                 self.metrics.summary()}
+
+    def _decode_segment(self, actives: List[Request]) -> List[Request]:
+        """Plain decode segment: no slot can exceed its budget before the
+        earliest one finishes, so no host sync inside the segment."""
+        sch = self.scheduler
+        t0 = self.metrics.now()
+        seg = max(1, min(r.remaining for r in actives))
+        finished: List[Request] = []
+        for _ in range(seg):
+            self._tokens, self._positions, self.kv.data, self._rng = \
+                self._decode_fn(self.params, self.kv.data, self._tokens,
+                                self._positions, self._block_tables,
+                                self._active, self._rng)
+            idx = len(self._token_log)
+            self._token_log.append(self._tokens)
+            for r in sch.active():
+                r.log_entries.append(idx)
+            finished.extend(sch.step_decoded())
+        jax.block_until_ready(self._tokens)            # segment boundary
+        self.metrics.decode_steps += seg
+        self.metrics.record_decode_segment(self.metrics.now() - t0,
+                                           seg * len(actives))
+        return finished
+
+    def _spec_segment(self, actives: List[Request]) -> List[Request]:
+        """Speculative segment: interleave fused K-token draft calls with
+        one multi-token verify call per round. Every round emits 1..K+1
+        tokens per active slot (device-clamped to the slot's budget), so
+        ceil(min_remaining / (K+1)) rounds can never overshoot the
+        earliest budget — the host syncs once at the boundary, exactly
+        like the plain segment loop."""
+        sch = self.scheduler
+        k = self.ecfg.spec_k
+        t0 = self.metrics.now()
+        rounds = max(1, -(-min(r.remaining for r in actives) // (k + 1)))
+        round_idxs: List[int] = []
+        for _ in range(rounds):
+            draft = self._draft_fn(
+                self.draft_params, self.kv.data, self._tokens,
+                self._positions, self._block_tables)
+            (out, n_new, self._tokens, self._positions, self._remaining,
+             self.kv.data, self._rng) = self._verify_fn(
+                self.params, self.kv.data, self._tokens, draft,
+                self._positions, self._block_tables, self._active,
+                self._remaining, self._rng)
+            idx = self._log_spec(out, n_new)
+            round_idxs.append(idx)
+            for r in sch.active():
+                r.log_entries.append(idx)
+        jax.block_until_ready(self._tokens)            # segment boundary
+        seg_tokens = 0
+        for idx in round_idxs:                         # replay the rounds
+            n_new_h = np.asarray(self._spec_log[idx][1])
+            proposed, accepted = sch.step_spec_round(n_new_h, k)
+            self.metrics.record_spec_round(proposed, accepted)
+            seg_tokens += int(n_new_h.sum())
+        # draft dispatches + verify dispatches (for dispatch accounting;
+        # spec_rounds tracks rounds)
+        self.metrics.decode_steps += 2 * rounds
+        self.metrics.record_decode_segment(self.metrics.now() - t0,
+                                           seg_tokens)
+        return sch.collect_finished()
 
     # -- internals ----------------------------------------------------------
 
@@ -182,8 +262,12 @@ class InferenceEngine:
             jnp.asarray(lengths), jnp.asarray(bt), self._rng)
         jax.block_until_ready(first)
         t = self.metrics.now()
-        idx = len(self._token_log)
-        self._token_log.append(first)
+        if self.spec:
+            idx = self._log_spec(first[:, None],
+                                 jnp.asarray(mask.astype(np.int32)))
+        else:
+            idx = len(self._token_log)
+            self._token_log.append(first)
         done_now = []
         for r in admitted:
             r.state = DECODE
@@ -201,19 +285,33 @@ class InferenceEngine:
         self._positions = jnp.where(m, jnp.asarray(lengths), self._positions)
         self._sync_slot_state()
 
+    def _log_spec(self, toks: jnp.ndarray, counts: jnp.ndarray) -> int:
+        """Append a (tokens [B, W], counts [B]) pair to the spec log,
+        width-padded to K+1 so materialization is one stack per array."""
+        w = self.ecfg.spec_k + 1
+        if toks.shape[1] < w:
+            toks = jnp.pad(toks, ((0, 0), (0, w - toks.shape[1])))
+        self._spec_log.append((toks, counts))
+        return len(self._spec_log) - 1
+
     def _sync_slot_state(self) -> None:
-        """Refresh device copies of the block tables + active mask after a
-        scheduling event (admission or eviction)."""
+        """Refresh device copies of the block tables + active mask +
+        per-slot budgets after a scheduling event (admission/eviction)."""
         self._block_tables = self.kv.device_block_tables()
         act = np.zeros((self.ecfg.num_slots,), np.int32)
+        rem = np.zeros((self.ecfg.num_slots,), np.int32)
         for i, slot in enumerate(self.scheduler.slots):
             if slot.request is not None and slot.request.state == DECODE:
                 act[i] = 1
+                rem[i] = slot.request.remaining
         self._active = jnp.asarray(act)
+        self._remaining = jnp.asarray(rem)
 
     def _materialize(self) -> List[Dict]:
         """One host sync: stack the token log and slice every request's
         generated tokens out of it (completion order)."""
+        if self.spec:
+            return self._materialize_spec()
         if self._token_log:
             mat = np.asarray(jnp.stack(self._token_log))
         else:
@@ -222,6 +320,29 @@ class InferenceEngine:
         for r in self.scheduler.finished:
             toks = mat[np.asarray(r.log_entries, np.int64), r.slot] \
                 if r.log_entries else np.zeros((0,), np.int32)
+            toks = toks[:r.produced]
+            r.output = toks.astype(np.int32)
+            out.append({"rid": r.rid, "prompt_len": r.prompt_len,
+                        "tokens": r.output, "n_generated": r.produced})
+        return out
+
+    def _materialize_spec(self) -> List[Dict]:
+        """Spec-mode materialization: entries are (tokens [B, K+1],
+        counts [B]) — a request's generation is the concatenation of its
+        rounds' accepted slices (two host transfers total)."""
+        if self._spec_log:
+            mat = np.asarray(jnp.stack([a for a, _ in self._spec_log]))
+            cnt = np.asarray(jnp.stack([c for _, c in self._spec_log]))
+        else:
+            mat = np.zeros((0, self.ecfg.num_slots, 1), np.int32)
+            cnt = np.zeros((0, self.ecfg.num_slots), np.int32)
+        out = []
+        for r in self.scheduler.finished:
+            if r.log_entries:
+                toks = np.concatenate(
+                    [mat[i, r.slot, :cnt[i, r.slot]] for i in r.log_entries])
+            else:
+                toks = np.zeros((0,), np.int32)
             toks = toks[:r.produced]
             r.output = toks.astype(np.int32)
             out.append({"rid": r.rid, "prompt_len": r.prompt_len,

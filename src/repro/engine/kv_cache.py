@@ -52,12 +52,22 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg, api, num_slots: int, max_seq: int,
-                 page_size: int = 16, num_pages: Optional[int] = None):
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 lookahead: int = 0):
         if api.init_paged_cache is None:
             raise NotImplementedError(
                 f"model family {cfg.family!r} has no paged-cache support")
         self.page_size = page_size
-        self.max_pages_per_slot = -(-max_seq // page_size)
+        # ``lookahead``: extra writable positions past a slot's budget for
+        # speculative decoding — the verify step scatters K+1 tokens at
+        # positions pos..pos+K before acceptance is known, so a slot's
+        # reservation must cover its worst case plus K tentative tokens.
+        # A rejected suffix is rolled back by *position rewind only*
+        # (engine rewinds its write position; the block table and the
+        # slot's page set never change mid-request), so accept/reject
+        # churn can never leak or thrash pages.
+        self.lookahead = lookahead
+        self.max_pages_per_slot = -(-(max_seq + lookahead) // page_size)
         # default pool: every slot can grow to max_seq simultaneously
         self.num_pages = (num_slots * self.max_pages_per_slot
                           if num_pages is None else num_pages)
@@ -69,14 +79,17 @@ class PagedKVCache:
         self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
 
     def pages_needed(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.page_size)
+        """Worst-case pages for a request: prompt + budget + the
+        speculative lookahead (tentative verify writes past the budget)."""
+        return -(-(n_tokens + self.lookahead) // self.page_size)
 
     def can_admit(self, n_tokens: int) -> bool:
         return self.allocator.can_alloc(self.pages_needed(n_tokens))
 
     def assign(self, slot: int, n_tokens: int) -> None:
-        """Reserve pages for a request's full lifetime (prompt + budget) —
-        admission-time reservation means decode can never hit OOM."""
+        """Reserve pages for a request's full lifetime (prompt + budget
+        + lookahead) — admission-time reservation means neither decode
+        nor a speculative verify write can ever hit OOM."""
         pages = self.allocator.alloc(self.pages_needed(n_tokens))
         self._slot_pages[slot] = pages
         self.block_tables[slot, :] = self.sentinel

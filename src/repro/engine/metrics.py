@@ -46,6 +46,24 @@ class EngineMetrics:
         self.start_t: Optional[float] = None
         self.end_t: Optional[float] = None
         self.decode_steps = 0
+        # speculative decoding: rounds dispatched, drafts proposed/accepted
+        self.spec_rounds = 0
+        self.draft_proposed = 0
+        self.draft_accepted = 0
+        # decode-phase wall time + tokens -> mean inter-token latency (the
+        # burst-aware latency speculative decoding actually changes: TPOT
+        # per request divides by tokens that may arrive K+1 at a time)
+        self.decode_time_s = 0.0
+        self.decode_tokens = 0
+
+    def record_decode_segment(self, seconds: float, tokens: int) -> None:
+        self.decode_time_s += seconds
+        self.decode_tokens += tokens
+
+    def record_spec_round(self, proposed: int, accepted: int) -> None:
+        self.spec_rounds += 1
+        self.draft_proposed += proposed
+        self.draft_accepted += accepted
 
     def now(self) -> float:
         return time.perf_counter()
@@ -90,14 +108,26 @@ class EngineMetrics:
             "tpot_ms_p99": _pct(tpots, 99) * 1e3,
             "latency_ms_p50": _pct(lats, 50) * 1e3,
             "latency_ms_p99": _pct(lats, 99) * 1e3,
+            "itl_ms_mean": (self.decode_time_s / self.decode_tokens * 1e3
+                            if self.decode_tokens else float("nan")),
+            "spec_rounds": self.spec_rounds,
+            "draft_proposed": self.draft_proposed,
+            "draft_accepted": self.draft_accepted,
+            "acceptance_rate": (self.draft_accepted / self.draft_proposed
+                                if self.draft_proposed else float("nan")),
         }
 
     def format_summary(self) -> str:
         s = self.summary()
-        return (f"served {s['requests']} requests, {s['tokens']} tokens in "
+        line = (f"served {s['requests']} requests, {s['tokens']} tokens in "
                 f"{s['seconds']:.2f}s -> {s['tok_per_s']:.1f} tok/s | "
                 f"TTFT p50 {s['ttft_ms_p50']:.1f}ms "
                 f"p99 {s['ttft_ms_p99']:.1f}ms | "
                 f"TPOT p50 {s['tpot_ms_p50']:.2f}ms "
                 f"p99 {s['tpot_ms_p99']:.2f}ms | "
                 f"latency p99 {s['latency_ms_p99']:.1f}ms")
+        if self.spec_rounds:
+            line += (f" | spec: {s['spec_rounds']} rounds, "
+                     f"acceptance {s['acceptance_rate']:.0%}, "
+                     f"ITL {s['itl_ms_mean']:.2f}ms")
+        return line

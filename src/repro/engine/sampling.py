@@ -1,8 +1,10 @@
-"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus), and
+the speculative-decoding verify (:func:`spec_verify` — lossless
+rejection sampling of draft tokens against the target distribution).
 
-``sample`` is pure and shape-stable, so it lives INSIDE the jitted
-prefill/decode steps — the sampled token never round-trips to the host
-(device-side token feedback, DESIGN.md §3.4).
+``sample`` and ``spec_verify`` are pure and shape-stable, so they live
+INSIDE the jitted prefill/decode/verify steps — sampled tokens never
+round-trip to the host (device-side token feedback, DESIGN.md §3.4).
 """
 from __future__ import annotations
 
@@ -23,18 +25,16 @@ class SamplingParams:
         return self.temperature <= 0.0
 
 
-def sample(logits: jnp.ndarray, rng: jnp.ndarray,
-           sp: SamplingParams) -> jnp.ndarray:
-    """logits: [B, V] -> tokens [B] int32. ``sp`` is static (closed over
-    at trace time), so disabled filters compile to nothing."""
-    if sp.greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def filter_logits(logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
+    """Temperature + top-k + top-p filtering: [..., V] -> [..., V] f32
+    with filtered entries at -inf. The *target distribution* of both
+    :func:`sample` and the speculative verify is softmax of this."""
     logits = logits.astype(jnp.float32) / sp.temperature
     if sp.top_k > 0 and sp.top_k < logits.shape[-1]:
-        kth = jnp.sort(logits, axis=-1)[:, -sp.top_k][:, None]
+        kth = jnp.sort(logits, axis=-1)[..., -sp.top_k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if sp.top_p < 1.0:
-        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]          # descending
+        sorted_l = jnp.sort(logits, axis=-1)[..., ::-1]        # descending
         probs = jax.nn.softmax(sorted_l, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         # keep the smallest prefix with cumulative mass >= top_p (always
@@ -43,4 +43,74 @@ def sample(logits: jnp.ndarray, rng: jnp.ndarray,
         cutoff = jnp.min(jnp.where(keep, sorted_l, jnp.inf), axis=-1,
                          keepdims=True)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+    return logits
+
+
+def sample(logits: jnp.ndarray, rng: jnp.ndarray,
+           sp: SamplingParams) -> jnp.ndarray:
+    """logits: [B, V] -> tokens [B] int32. ``sp`` is static (closed over
+    at trace time), so disabled filters compile to nothing."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, filter_logits(logits, sp),
+                                  axis=-1).astype(jnp.int32)
+
+
+def spec_verify(logits: jnp.ndarray, draft: jnp.ndarray, rng: jnp.ndarray,
+                sp: SamplingParams):
+    """Speculative-decoding acceptance (DESIGN.md §4): lossless rejection
+    sampling of K greedy draft tokens against K+1 target distributions.
+
+    logits: [B, K+1, V] target logits at the K+1 fed positions (position i
+    is the target distribution for the token AFTER the first i accepted
+    drafts); draft: [B, K] greedy draft proposals. Returns
+    ``(n_acc [B] int32, out [B, K+1] int32)``: ``n_acc`` in [0, K] is the
+    accepted prefix length and ``out[:, :n_acc]`` are the accepted drafts,
+    ``out[:, n_acc]`` the bonus/correction token — a round always yields
+    ``n_acc + 1`` tokens; entries past that are unspecified.
+
+    Losslessness: with temperature 0 a draft is accepted iff it equals the
+    target argmax and the correction IS the target argmax, so the output
+    is token-for-token the non-speculative greedy sequence. With
+    temperature > 0 this is Leviathan-style rejection sampling with a
+    point-mass draft distribution q = 1{x = draft}: accept with
+    probability min(1, p(x)/q(x)) = p(draft); on rejection resample from
+    the residual norm(max(p - q, 0)) = p with the rejected token zeroed.
+    Either way each emitted token is distributed exactly as the target
+    p — the draft model only ever changes throughput, never the output
+    distribution.
+    """
+    b, k1, v = logits.shape
+    k = k1 - 1
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [B, K+1]
+    if sp.greedy:
+        match = (draft == tgt[:, :k]).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)
+        # accepted drafts == target argmaxes, and tgt[n_acc] is exactly the
+        # correction (first mismatch) / bonus (all matched) token
+        return n_acc.astype(jnp.int32), tgt
+    probs = jax.nn.softmax(filter_logits(logits, sp), axis=-1)  # [B,K+1,V]
+    p_draft = jnp.take_along_axis(probs[:, :k, :], draft[..., None],
+                                  axis=-1)[..., 0]              # [B, K]
+    r_accept, r_resample = jax.random.split(rng)
+    u = jax.random.uniform(r_accept, (b, k))
+    accept = (u < p_draft).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(accept, axis=-1), axis=-1)      # [B]
+    # residual distribution at every candidate stop index i < K: the
+    # target with the rejected draft token's mass removed (q is a point
+    # mass, so max(p - q, 0) just zeroes that token); index K (all
+    # accepted) keeps the full target as the bonus distribution
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, k1, v), 2)
+    drafted = jnp.concatenate(
+        [draft, jnp.full((b, 1), -1, jnp.int32)], axis=1)       # [B, K+1]
+    residual = jnp.where(iota == drafted[..., None], 0.0, probs)
+    resample = jax.random.categorical(
+        r_resample, jnp.log(jnp.maximum(residual, 1e-30)),
+        axis=-1).astype(jnp.int32)                              # [B, K+1]
+    # out[:, i] = draft token for i < n_acc, the resampled correction at
+    # i == n_acc (or the bonus draw at i == K)
+    idx = jnp.arange(k1, dtype=jnp.int32)[None, :]
+    draft_pad = jnp.concatenate(
+        [draft, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    out = jnp.where(idx < n_acc[:, None], draft_pad, resample)
+    return n_acc.astype(jnp.int32), out

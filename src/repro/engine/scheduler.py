@@ -36,8 +36,13 @@ class Request:
     slot: Optional[int] = None
     produced: int = 0                  # generated tokens (incl. prefill's)
     output: Optional[np.ndarray] = None
-    # indices into the engine's device-side token log (one per token)
+    # indices into the engine's device-side token log (one per token in
+    # plain decode; one per draft/verify round in speculative decode)
     log_entries: List[int] = dataclasses.field(default_factory=list)
+    # speculative-decoding accounting (drafts proposed/accepted for this
+    # request — per-request acceptance feeds the engine metrics)
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -47,6 +52,14 @@ class Request:
     def total_tokens(self) -> int:
         """Worst-case KV footprint: prompt + full generation budget."""
         return self.prompt_len + self.max_new_tokens
+
+    @property
+    def remaining(self) -> int:
+        """Generation budget left — the request's *draft budget*: a
+        speculative round may propose at most ``remaining - 1`` useful
+        drafts (the round always emits >= 1 token), and the device clamps
+        acceptance to exactly this many tokens."""
+        return max(self.max_new_tokens - self.produced, 0)
 
 
 @dataclasses.dataclass
@@ -127,6 +140,41 @@ class Scheduler:
             if r.produced >= r.max_new_tokens or s.position >= self.max_seq:
                 done.append(r)
         return done
+
+    def step_spec_round(self, n_new: np.ndarray, k: int):
+        """Account one speculative draft/verify round: slot ``i`` produced
+        ``n_new[i]`` tokens (0 for free / budget-exhausted slots — the
+        device clamps to the draft budget, so overshoot is impossible).
+        A request with ``remaining`` budget can usefully accept at most
+        ``remaining - 1`` drafts, so proposals are clamped to that when
+        counting acceptance (a budget cut-off is not a rejection).
+        Returns the round's ``(proposed, accepted)`` totals. Completion is
+        detected by :meth:`collect_finished` after the segment's rounds
+        are replayed (a request may finish mid-segment and idle until the
+        boundary)."""
+        proposed_t = accepted_t = 0
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            n = int(n_new[i])
+            if n <= 0:
+                continue
+            r = s.request
+            proposed = min(k, max(r.remaining - 1, 0))
+            r.produced += n
+            s.position += n
+            r.draft_proposed += proposed
+            r.draft_accepted += n - 1
+            proposed_t += proposed
+            accepted_t += n - 1
+        return proposed_t, accepted_t
+
+    def collect_finished(self) -> List[Request]:
+        """Requests that hit their budget (still occupying their slot)."""
+        return [s.request for s in self.slots
+                if not s.free and (s.request.produced >=
+                                   s.request.max_new_tokens
+                                   or s.position >= self.max_seq)]
 
     def finish(self, req: Request) -> None:
         """Evict: free the slot + pages; the loop refills via admit()."""

@@ -1,0 +1,21 @@
+"""Self-speculative decoding (DESIGN.md §4).
+
+The engine drafts K tokens per round with a second, more aggressively
+compressed GQSA parameter set of the SAME checkpoint (the draft profile,
+``core/model_compress.py:compress_draft``), then verifies all K in one
+multi-token target step and keeps the longest accepted prefix plus a
+correction/bonus token. Verification is lossless: greedy speculative
+output is token-for-token identical to greedy non-speculative output
+(``engine/sampling.py:spec_verify``).
+
+    from repro.engine import EngineConfig, InferenceEngine
+    from repro.core.model_compress import compress_draft
+    draft = compress_draft(fp_params, cfg, profile="w4s75")
+    eng = InferenceEngine(cfg, target_params,
+                          EngineConfig(num_slots=4, spec_k=4),
+                          draft_params=draft)
+"""
+from repro.engine.spec.drafter import build_draft_fn, spec_step_fns
+from repro.engine.spec.verify import build_verify_fn
+
+__all__ = ["build_draft_fn", "build_verify_fn", "spec_step_fns"]

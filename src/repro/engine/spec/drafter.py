@@ -1,0 +1,76 @@
+"""The drafter: K greedy draft steps from the compressed draft model.
+
+The draft model shares the target's paged KV pool (self-speculative
+serving: one pool, one block table per slot): its attention reads the
+*target-written* history below each slot's position. The drafter's own
+K/V (for the tokens it feeds inside a round) lives only in the call's
+functional cache value and is DISCARDED when the round ends — the verify
+step re-writes every fed position with target K/V, so draft-quality K/V
+never survives a round and the pool's committed prefix always holds
+exactly what sequential target decode would have written.
+
+Depth-pruned draft profiles (``w4l25`` etc.) run only the first
+``draft_layers`` layers: the drafter reads/writes the leading layer
+slices of the pool and the deeper layers are untouched (their fed-range
+contents are stale either way until the verify scatter).
+
+All K steps run inside ONE jitted call (the loop is unrolled at trace
+time — K is small and static), so a draft round costs a single dispatch
+regardless of K; the greedy argmax feedback never leaves the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.sampling import SamplingParams
+from repro.engine.spec.verify import build_verify_fn
+from repro.models.registry import get_model
+
+
+def build_draft_fn(cfg, api, use_pallas: bool, k: int,
+                   draft_layers: Optional[int] = None):
+    """Returns draft_fn(draft_params, cache, tokens, positions,
+    block_tables) -> draft_tokens [B, K].
+
+    ``tokens`` [B] is each slot's last sampled-but-unfed token;
+    ``positions`` [B] its write position. Greedy by construction: the
+    draft distribution is a point mass, which keeps the verify step's
+    rejection sampling exact for any target temperature. The cache
+    argument is read-only from the caller's perspective (draft K/V is
+    local to the call, see module docstring).
+    """
+    dl = draft_layers if draft_layers is not None else cfg.n_layers
+    dcfg = dataclasses.replace(cfg, n_layers=dl) if dl != cfg.n_layers \
+        else cfg
+
+    def draft_fn(draft_params, cache, tokens, positions, block_tables):
+        dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
+            if dl != cfg.n_layers else cache
+        toks = tokens
+        drafts = []
+        for j in range(k):
+            logits, dcache = api.decode_step(
+                draft_params, dcache, toks[:, None], positions + j, dcfg,
+                None, use_pallas, block_tables=block_tables)
+            toks = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            drafts.append(toks)
+        return jnp.stack(drafts, axis=1)
+
+    return draft_fn
+
+
+@functools.lru_cache(maxsize=32)
+def spec_step_fns(cfg, sampling: SamplingParams, use_pallas: bool, k: int,
+                  draft_layers: Optional[int] = None):
+    """Jitted (draft_fn, verify_fn) pair, memoized per (model config,
+    sampling, backend, K, draft depth) exactly like the engine's
+    ``_step_fns`` — a fresh engine per workload must not recompile."""
+    api = get_model(cfg)
+    draft_fn = build_draft_fn(cfg, api, use_pallas, k, draft_layers)
+    verify_fn = build_verify_fn(cfg, api, sampling, use_pallas, k)
+    return jax.jit(draft_fn), jax.jit(verify_fn)

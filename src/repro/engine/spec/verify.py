@@ -1,0 +1,53 @@
+"""The verify step: one multi-token target pass over the K draft tokens.
+
+Feeds ``[t_last, d_1 .. d_K]`` (K+1 tokens) at positions
+``pos .. pos + K`` through the target model in a single jitted call —
+a per-slot short-prefill reusing the paged decode path
+(``transformer.decode_step`` with T = K+1). Position i's logits are the
+target distribution after the first i drafts, so all K acceptance tests
+AND the bonus distribution come from one dispatch.
+
+Rollback of a rejected suffix is purely positional: the new position is
+``pos + n_new`` and the stale K/V beyond it is never read (the per-query
+length masks it) and is overwritten by the next round — no page
+alloc/free ever happens mid-request (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.sampling import SamplingParams, spec_verify
+
+
+def build_verify_fn(cfg, api, sampling: SamplingParams, use_pallas: bool,
+                    k: int):
+    """Returns verify_fn(params, cache, tokens, draft_tokens, positions,
+    block_tables, active, remaining, rng) ->
+    (out [B, K+1], n_new [B], tokens', positions', remaining', cache, rng).
+
+    ``remaining`` [B] is each slot's generation budget left; ``n_new`` is
+    the number of tokens the round produced for each slot (0 for inactive
+    or budget-exhausted slots — the device clamps, so the host can run
+    whole segments of rounds without syncing).
+    """
+
+    def verify_fn(params, cache, tokens, draft_tokens, positions,
+                  block_tables, active, remaining, rng):
+        feed = jnp.concatenate([tokens[:, None], draft_tokens], axis=1)
+        logits, cache = api.decode_step(
+            params, cache, feed, positions, cfg, None, use_pallas,
+            block_tables=block_tables)
+        rng, sub = jax.random.split(rng)
+        n_acc, out = spec_verify(logits, draft_tokens, sub, sampling)
+        n_new = jnp.minimum(n_acc + 1, remaining) * active      # [B]
+        # the round's last produced token is the next step's feed; slots
+        # that produced nothing keep their pending token
+        nxt = jnp.take_along_axis(
+            out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
+        tokens = jnp.where(n_new > 0, nxt, tokens)
+        positions = positions + n_new                # rejected suffix: rewind
+        remaining = remaining - n_new
+        return out, n_new, tokens, positions, remaining, cache, rng
+
+    return verify_fn

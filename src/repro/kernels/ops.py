@@ -35,6 +35,14 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=value)
 
 
+# The GEMV kernel keeps ALL of x resident in VMEM per grid step and sizes
+# its accumulator tile [B, BN] for decode batches — one sublane tile. The
+# engine's speculative verify step flattens [slots, K+1] token rows into
+# the batch dim, so B routinely exceeds this; larger batches are chunked
+# explicitly rather than silently mis-tiled.
+MAX_GEMV_BATCH = 8
+
+
 def gqsa_gemv(
     x: jnp.ndarray,
     bsr: BSRMatrix,
@@ -46,7 +54,10 @@ def gqsa_gemv(
 ) -> jnp.ndarray:
     """y = x @ dense(bsr).T using the task-centric sparse kernel.
 
-    x: [B, K] (any B; padded to sublane multiple internally). Returns [B, N].
+    x: [B, K], any B: rows are padded to the sublane multiple and batches
+    beyond MAX_GEMV_BATCH are chunked over the kernel (the BSR payload
+    pads and the work list build happen once, shared by every chunk).
+    Returns [B, N].
     """
     if not use_pallas:
         return kref.gqsa_gemv_ref(x, bsr)
@@ -55,23 +66,26 @@ def gqsa_gemv(
 
     b, k = x.shape
     n, m = bsr.idx.shape
-    bp = max(8, int(np.ceil(b / 8)) * 8)
-    xp = _pad_to(x, 0, bp - b + b if bp == b else bp)  # pad batch to bp
-    if xp.shape[0] != bp:
-        xp = jnp.pad(x, ((0, bp - b), (0, 0)))
 
     idx = _pad_to(_pad_to(bsr.idx, 0, block_n, value=-1), 1, block_m, value=-1)
     vals = _pad_to(_pad_to(bsr.vals, 0, block_n), 1, block_m)
     scale = _pad_to(_pad_to(bsr.scale, 0, block_n), 1, block_m)
     zero = _pad_to(_pad_to(bsr.zero, 0, block_n), 1, block_m)
-
     wl = build_work_list(idx, block_n, block_m)
-    y = gqsa_gemv_pallas(
-        xp, idx, vals, scale, zero,
-        (wl.row_block, wl.chunk, wl.first),
-        group_size=bsr.group_size, block_n=block_n, block_m=block_m,
-        interpret=interpret)
-    return y[:b, :n]
+
+    def run(xc: jnp.ndarray) -> jnp.ndarray:
+        bc = xc.shape[0]
+        y = gqsa_gemv_pallas(
+            _pad_to(xc, 0, MAX_GEMV_BATCH), idx, vals, scale, zero,
+            (wl.row_block, wl.chunk, wl.first),
+            group_size=bsr.group_size, block_n=block_n, block_m=block_m,
+            interpret=interpret)
+        return y[:bc, :n]
+
+    if b <= MAX_GEMV_BATCH:
+        return run(x)
+    return jnp.concatenate([run(x[i:i + MAX_GEMV_BATCH])
+                            for i in range(0, b, MAX_GEMV_BATCH)], axis=0)
 
 
 def w4_matmul(

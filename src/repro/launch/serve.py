@@ -18,9 +18,10 @@ from typing import List
 import jax
 import numpy as np
 
-from repro.configs.registry import get_config
+from repro.configs.registry import get_config, list_draft_profiles
 from repro.core.gqs_layer import GQSAConfig
-from repro.core.model_compress import (compress_params, compress_params_w4)
+from repro.core.model_compress import (compress_draft, compress_params,
+                                       compress_params_w4, draft_layers)
 from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
 from repro.engine import EngineConfig, InferenceEngine, SamplingParams
@@ -32,9 +33,9 @@ def make_requests(n, vocab, rng, lo=4, hi=16):
     return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
 
 
-def compressed_params(cfg, args, rng):
+def compressed_params(cfg, args, rng, fp_params=None):
     api = get_model(cfg)
-    params = api.init_params(rng, cfg)
+    params = api.init_params(rng, cfg) if fp_params is None else fp_params
     t0 = time.time()
     if args.compress == "gqsa":
         gqsa = GQSAConfig(
@@ -70,21 +71,44 @@ def main(argv=None):
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per round "
+                         "(0 = off); lossless — output matches non-spec")
+    ap.add_argument("--draft-profile", default="w4s75",
+                    choices=list_draft_profiles(),
+                    help="draft compression of the same checkpoint")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     rng = jax.random.PRNGKey(args.seed)
-    params = compressed_params(cfg, args, rng)
+    # the FP tree is only needed as the shared source of target + draft
+    # compression; don't keep a full-scale checkpoint alive otherwise
+    fp_params = get_model(cfg).init_params(rng, cfg) if args.spec > 0 \
+        else None
+    params = compressed_params(cfg, args, rng, fp_params=fp_params)
+    draft_params = None
+    dlayers = None
+    if args.spec > 0:
+        t0 = time.time()
+        draft_params = compress_draft(fp_params, cfg,
+                                      profile=args.draft_profile,
+                                      group_size=args.group_size)
+        dlayers = draft_layers(cfg, args.draft_profile)
+        print(f"packed draft profile {args.draft_profile} "
+              f"({dlayers}/{cfg.n_layers} layers) in {time.time()-t0:.1f}s")
+        fp_params = None                 # free the FP tree before serving
 
     engine = InferenceEngine(
         cfg, params,
         EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
                      page_size=args.page_size, num_pages=args.num_pages,
-                     use_pallas=args.use_pallas, seed=args.seed),
+                     use_pallas=args.use_pallas, seed=args.seed,
+                     spec_k=args.spec, spec_draft_layers=dlayers),
         SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                       top_p=args.top_p))
+                       top_p=args.top_p),
+        draft_params=draft_params)
 
     nprng = np.random.default_rng(args.seed)
     # prompts must leave room for the generation budget within max_seq

@@ -278,6 +278,14 @@ def quantize_kv(x: jnp.ndarray):
     return q, scale
 
 
+def _query_lengths(length: jnp.ndarray, b: int, t: int) -> jnp.ndarray:
+    """Broadcast a [] / [B] / [B, T] valid-prefix spec to [B, T]."""
+    l = jnp.asarray(length)
+    if l.ndim == 1:
+        l = l[:, None]
+    return jnp.broadcast_to(l, (b, t))
+
+
 def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
                           k_scale: jnp.ndarray, v_cache: jnp.ndarray,
                           v_scale: jnp.ndarray,
@@ -285,63 +293,71 @@ def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
     """int8 KV-cache attention (beyond-paper GQSA extension: at 32k-context
     decode the cache, not the weights, dominates HBM traffic).
 
-    q: [B, 1, H, D]; k/v_cache: int8 [B, S, KH, D]; scales: f32 [B, S, KH].
+    q: [B, T, H, D] (T=1 decode; T=K+1 speculative verify); k/v_cache: int8
+    [B, S, KH, D]; scales: f32 [B, S, KH]; length: [] / [B] / [B, T]
+    per-query valid prefix (T > 1 is causal via a staircase length).
     q is quantized per-head to int8 so the score contraction is an
     int8 x int8 -> int32 dot (half the cache read bytes of bf16); the
     softmax weights are likewise quantized so p @ v runs int8 x int8.
     """
     b, s, khn, d = k_cache.shape
-    h = q.shape[2]
+    t, h = q.shape[1], q.shape[2]
     r = h // khn
     scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
-    qh = q.reshape(b, khn, r, d)
-    q_i8, q_sc = quantize_kv(qh.reshape(b, 1, khn * r, d))
-    q_i8 = q_i8.reshape(b, khn, r, d)
-    q_sc = q_sc.reshape(b, khn, r)
-    sco_i = jnp.einsum("bkrd,bskd->bkrs", q_i8, k_cache,
+    qh = q.reshape(b, t, khn, r, d)
+    q_i8, q_sc = quantize_kv(qh.reshape(b, t, khn * r, d))
+    q_i8 = q_i8.reshape(b, t, khn, r, d)
+    q_sc = q_sc.reshape(b, t, khn, r)
+    sco_i = jnp.einsum("btkrd,bskd->bkrts", q_i8, k_cache,
                        preferred_element_type=jnp.int32)
     sco = (sco_i.astype(jnp.float32)
-           * q_sc[..., None] * k_scale.transpose(0, 2, 1)[:, :, None, :]
+           * q_sc.transpose(0, 2, 3, 1)[..., None]
+           * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
            * scale)
     pos = jnp.arange(s)
-    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
-    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
-    p = jax.nn.softmax(sco, axis=-1)                        # [B,KH,R,S]
+    lq = _query_lengths(length, b, t)                      # [B, T]
+    valid = pos[None, None, :] < lq[..., None]             # [B, T, S]
+    sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     # fold the per-position value scale into p, then quantize p to int8
-    p_scaled = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    p_scaled = p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
     p_amax = jnp.maximum(jnp.max(p_scaled, axis=-1), 1e-9)
     p_i8 = jnp.clip(jnp.round(p_scaled / p_amax[..., None] * 127.0),
                     -127, 127).astype(jnp.int8)
-    o_i = jnp.einsum("bkrs,bskd->bkrd", p_i8, v_cache,
+    o_i = jnp.einsum("bkrts,bskd->btkrd", p_i8, v_cache,
                      preferred_element_type=jnp.int32)
-    o = o_i.astype(jnp.float32) * (p_amax[..., None] / 127.0)
-    return o.reshape(b, 1, h, d).astype(q.dtype)
+    o = o_i.astype(jnp.float32) * (p_amax.transpose(0, 3, 1, 2)[..., None]
+                                   / 127.0)
+    return o.reshape(b, t, h, d).astype(q.dtype)
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
-    """Single-step attention against a cache.
+    """Short-query attention against a cache.
 
-    q: [B, 1, H, D]; caches: [B, S, KH, D]; length: [] or [B] valid prefix.
+    q: [B, T, H, D] (T=1 plain decode; T=K+1 for the speculative verify
+    step's short-prefill); caches: [B, S, KH, D]; length: [] / [B] / [B, T]
+    valid prefix per query (a per-query staircase makes T > 1 causal).
     """
     b, s, khn, d = k_cache.shape
     dv = v_cache.shape[-1]
-    h = q.shape[2]
+    t, h = q.shape[1], q.shape[2]
     r = h // khn
     scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
     # keep caches in their storage dtype AND layout: no f32 copy, no
     # transpose of the whole KV history — contract in cache layout and
     # accumulate in f32 via the dot itself
-    qh = q.reshape(b, khn, r, d).astype(k_cache.dtype)
-    sco = jnp.einsum("bkrd,bskd->bkrs", qh, k_cache,
+    qh = q.reshape(b, t, khn, r, d).astype(k_cache.dtype)
+    sco = jnp.einsum("btkrd,bskd->bkrts", qh, k_cache,
                      preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(s)
-    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
-    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
-    p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,S]
-    o = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
+    lq = _query_lengths(length, b, t)                      # [B, T]
+    valid = pos[None, None, :] < lq[..., None]             # [B, T, S]
+    sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
+    o = jnp.einsum("bkrts,bskd->btkrd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
-    return o.reshape(b, 1, h, dv).astype(q.dtype)
+    return o.reshape(b, t, h, dv).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -489,26 +505,34 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                            block_tables: jnp.ndarray, positions: jnp.ndarray,
                            cfg, use_pallas=False
                            ) -> Tuple[jnp.ndarray, Dict]:
-    """One decode step against a *paged* KV cache (one layer's view).
+    """One decode step of T tokens against a *paged* KV cache (one layer's
+    view). T=1 is plain continuous-batching decode; T=K+1 is the
+    speculative-decoding verify step's per-slot short-prefill.
 
-    x: [B, 1, d]; positions: [B] write position per slot; block_tables:
-    [B, MP] page ids (entries == n_pages are out-of-range sentinels:
-    scatter-writes to them are dropped, gather-reads clip and get masked
-    by the per-slot length). cache: {"k_pages"/"v_pages": [P, ps, KH, D]}
+    x: [B, T, d]; positions: [B] write position of each slot's FIRST
+    token (token t lands at positions + t); block_tables: [B, MP] page ids
+    (entries == n_pages are out-of-range sentinels: scatter-writes to
+    them are dropped, gather-reads clip and get masked by the per-query
+    length). cache: {"k_pages"/"v_pages": [P, ps, KH, D]}
     (+ "k_scale_pages"/"v_scale_pages" [P, ps, KH] for int8).
+
+    Causality inside the T block comes from the per-query staircase
+    length (query t sees cache positions < positions + t + 1); the K/V of
+    all T tokens are scattered before the gather, so later queries attend
+    to earlier fed tokens exactly as a sequential decode would.
     """
-    b = x.shape[0]
+    b, t, _ = x.shape
     kp = cache["k_pages"]
     page_size = kp.shape[1]
-    q, k, v = attn_qkv(p, x, positions[:, None].astype(jnp.int32), cfg,
-                       use_pallas)
-    page = jnp.take_along_axis(block_tables,
-                               (positions // page_size)[:, None],
-                               axis=1)[:, 0]
-    off = positions % page_size
-    length = positions + 1
+    pos_bt = (positions[:, None].astype(jnp.int32)
+              + jnp.arange(t, dtype=jnp.int32)[None, :])
+    q, k, v = attn_qkv(p, x, pos_bt, cfg, use_pallas)
+    page = jnp.take_along_axis(block_tables, pos_bt // page_size,
+                               axis=1)                       # [B, T]
+    off = pos_bt % page_size
+    length = pos_bt + 1                                      # [B, T]
 
-    def write(buf, new):                 # [P, ps, ...] <- [B, ...]
+    def write(buf, new):                 # [P, ps, ...] <- [B, T, ...]
         return buf.at[page, off].set(new.astype(buf.dtype))
 
     def view(buf):                       # [P, ps, ...] -> [B, MP*ps, ...]
@@ -518,20 +542,20 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     if "k_scale_pages" in cache:         # int8 paged cache
         k_i8, k_sc = quantize_kv(k)
         v_i8, v_sc = quantize_kv(v)
-        new = {"k_pages": write(kp, k_i8[:, 0]),
-               "v_pages": write(cache["v_pages"], v_i8[:, 0]),
-               "k_scale_pages": write(cache["k_scale_pages"], k_sc[:, 0]),
-               "v_scale_pages": write(cache["v_scale_pages"], v_sc[:, 0])}
+        new = {"k_pages": write(kp, k_i8),
+               "v_pages": write(cache["v_pages"], v_i8),
+               "k_scale_pages": write(cache["k_scale_pages"], k_sc),
+               "v_scale_pages": write(cache["v_scale_pages"], v_sc)}
         o = decode_attention_int8(q, view(new["k_pages"]),
                                   view(new["k_scale_pages"]),
                                   view(new["v_pages"]),
                                   view(new["v_scale_pages"]), length)
     else:
-        new = {"k_pages": write(kp, k[:, 0]),
-               "v_pages": write(cache["v_pages"], v[:, 0])}
+        new = {"k_pages": write(kp, k),
+               "v_pages": write(cache["v_pages"], v)}
         o = decode_attention(q, view(new["k_pages"]), view(new["v_pages"]),
                              length)
-    y = apply_linear(p["wo"], o.reshape(b, 1, -1), use_pallas=use_pallas)
+    y = apply_linear(p["wo"], o.reshape(b, t, -1), use_pallas=use_pallas)
     return y, new
 
 

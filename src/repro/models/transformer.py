@@ -254,10 +254,13 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
 def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False,
                 block_tables=None) -> Tuple[jnp.ndarray, Dict]:
-    """tokens: [B, 1]; pos: scalar shared step index OR [B] per-slot
+    """tokens: [B, T]; pos: scalar shared step index OR [B] per-slot
     positions. ``cache`` is either the contiguous cache from
-    :func:`init_cache` or the paged view from :func:`init_paged_cache`
-    (then ``block_tables`` [B, MP] is required). Returns (logits, cache)."""
+    :func:`init_cache` (T must be 1) or the paged view from
+    :func:`init_paged_cache` (then ``block_tables`` [B, MP] is required
+    and T may exceed 1: token t is written/attended at pos + t — the
+    speculative-decoding verify step's per-slot short-prefill).
+    Returns (logits [B, T, V], cache)."""
     paged = isinstance(cache, dict) and "k_pages" in cache
     if paged and block_tables is None:
         raise ValueError("paged cache decode requires block_tables")

@@ -225,6 +225,98 @@ def test_engine_temperature_sampling_runs(tiny):
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding (engine/spec/): losslessness + KV rollback hygiene
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def draft_sets(tiny):
+    """Draft parameter sets off the same checkpoint: near-target (w4,
+    high acceptance), aggressive (w4s75, frequent rejections), and
+    depth-pruned (w4l50: half the layers — LayerSkip-style)."""
+    from repro.core.model_compress import compress_draft
+    cfg, api, params = tiny
+    return {p: compress_draft(params, cfg, profile=p)
+            for p in ("w4", "w4s75", "w4l50")}
+
+
+def _run_engine(cfg, params, prompts, max_new, spec_k=0, draft=None,
+                sampling=SamplingParams(), **ecfg):
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=2, max_seq=24, page_size=4, spec_k=spec_k,
+                     **ecfg),
+        sampling, draft_params=draft)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    res = eng.run()
+    return eng, rids, res
+
+
+@pytest.mark.parametrize("profile", ["w4", "w4s75", "w4l50"])
+def test_spec_greedy_lossless(tiny, draft_sets, profile):
+    """Greedy speculative output is token-for-token identical to greedy
+    non-speculative output — for a high-acceptance, a high-rejection and
+    a depth-pruned draft (losslessness cannot depend on draft quality)."""
+    from repro.core.model_compress import draft_layers
+    cfg, api, params = tiny
+    prompts = _prompts(cfg.vocab, (5, 9, 4, 7), seed=3)
+    _, rids0, res0 = _run_engine(cfg, params, prompts, 6)
+    eng, rids1, res1 = _run_engine(
+        cfg, params, prompts, 6, spec_k=3, draft=draft_sets[profile],
+        spec_draft_layers=draft_layers(cfg, profile))
+    by0 = {r["rid"]: list(r["tokens"]) for r in res0["results"]}
+    by1 = {r["rid"]: list(r["tokens"]) for r in res1["results"]}
+    for r0, r1 in zip(rids0, rids1):
+        assert by0[r0] == by1[r1]
+    m = res1["metrics"]
+    assert m["spec_rounds"] > 0 and m["draft_proposed"] > 0
+    assert 0.0 <= m["acceptance_rate"] <= 1.0
+
+
+def test_spec_kv_rollback_leak_free(tiny, draft_sets):
+    """After any mix of accept/reject rounds and request completions
+    (pool sized so requests stream through a single resident slot), every
+    page returns to the allocator: rollback is positional only — no page
+    churn on partial rejection, no leaks at completion."""
+    cfg, api, params = tiny
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=2, max_seq=16, page_size=4, num_pages=5,
+                     spec_k=3),
+        SamplingParams(), draft_params=draft_sets["w4s75"])
+    initial_free = eng.kv.allocator.num_free
+    assert initial_free == 5
+    for p in _prompts(cfg.vocab, (5, 6, 7, 5)):
+        eng.submit(p, 4)   # 9-11 tokens + lookahead -> 4 pages: one resident
+    res = eng.run()
+    assert len(res["results"]) == 4
+    assert all(r["n_generated"] == 4 for r in res["results"])
+    assert eng.kv.allocator.num_free == initial_free
+
+
+def test_spec_temperature_sampling_runs(tiny, draft_sets):
+    """Rejection sampling path (temperature > 0): correct budgets, valid
+    tokens, sane acceptance accounting."""
+    cfg, api, params = tiny
+    prompts = _prompts(cfg.vocab, (4, 6, 5), seed=11)
+    eng, _, res = _run_engine(
+        cfg, params, prompts, 5, spec_k=4, draft=draft_sets["w4"],
+        sampling=SamplingParams(temperature=0.8, top_k=16))
+    assert len(res["results"]) == 3
+    for r in res["results"]:
+        assert r["tokens"].shape == (5,)
+        assert (r["tokens"] >= 0).all() and (r["tokens"] < cfg.vocab).all()
+    m = res["metrics"]
+    assert m["draft_accepted"] <= m["draft_proposed"]
+    assert eng.kv.allocator.num_free == eng.kv.num_pages
+
+
+def test_spec_requires_draft_params(tiny):
+    cfg, api, params = tiny
+    with pytest.raises(ValueError):
+        InferenceEngine(cfg, params, EngineConfig(spec_k=2))
+
+
+# ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------
 

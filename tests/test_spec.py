@@ -1,0 +1,185 @@
+"""Speculative decoding: rejection-sampling correctness, sampling filter
+edge cases, draft profiles, and the spec/ step builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # pragma: no cover
+    from _hyp import given, settings, st
+
+from repro.engine.sampling import (SamplingParams, filter_logits, sample,
+                                   spec_verify)
+
+GREEDY = SamplingParams()
+
+
+def _ref_greedy_verify(logits, draft):
+    """Reference: sequential greedy acceptance, one row."""
+    tgt = np.argmax(logits, axis=-1)
+    n = 0
+    for i in range(draft.shape[0]):
+        if draft[i] != tgt[i]:
+            break
+        n += 1
+    return n, list(draft[:n]) + [tgt[n]]
+
+
+# ---------------------------------------------------------------------------
+# spec_verify: greedy path
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_greedy_matches_sequential_reference():
+    rng = np.random.default_rng(0)
+    B, K, V = 4, 4, 16
+    logits = rng.normal(size=(B, K + 1, V)).astype(np.float32)
+    tgt = logits.argmax(-1)
+    # rows: full accept, reject at 0, reject midway, random draft
+    draft = np.stack([
+        tgt[0, :K],
+        (tgt[1, :K] + 1) % V,
+        np.concatenate([tgt[2, :2], (tgt[2, 2:K] + 1) % V]),
+        rng.integers(0, V, size=K),
+    ]).astype(np.int32)
+    n_acc, out = spec_verify(jnp.asarray(logits), jnp.asarray(draft),
+                             jax.random.PRNGKey(0), GREEDY)
+    n_acc, out = np.asarray(n_acc), np.asarray(out)
+    assert n_acc[0] == K and n_acc[1] == 0 and n_acc[2] == 2
+    for b in range(B):
+        n_ref, toks_ref = _ref_greedy_verify(logits[b], draft[b])
+        assert n_acc[b] == n_ref
+        assert list(out[b, :n_ref + 1]) == toks_ref
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 33))
+def test_spec_verify_greedy_property(seed, k, v):
+    """For ANY logits/draft, greedy spec output == sequential greedy:
+    accepted prefix is the longest argmax match and the correction IS the
+    target argmax at the stop position (losslessness, DESIGN.md §4)."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(2, k + 1, v)).astype(np.float32)
+    # half adversarial (copy argmax into the draft), half random
+    draft = rng.integers(0, v, size=(2, k)).astype(np.int32)
+    match_len = rng.integers(0, k + 1)
+    draft[0, :match_len] = logits[0].argmax(-1)[:match_len]
+    n_acc, out = spec_verify(jnp.asarray(logits), jnp.asarray(draft),
+                             jax.random.PRNGKey(seed), GREEDY)
+    n_acc, out = np.asarray(n_acc), np.asarray(out)
+    for b in range(2):
+        n_ref, toks_ref = _ref_greedy_verify(logits[b], draft[b])
+        assert n_acc[b] == n_ref
+        assert list(out[b, :n_ref + 1]) == toks_ref
+
+
+# ---------------------------------------------------------------------------
+# spec_verify: rejection sampling preserves the target distribution
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_first_token_distribution_preserved():
+    """The first emitted token of a round must be distributed exactly as
+    the target p(. | prefix) — whatever the draft proposed. Empirical
+    check over many rng draws against the analytic target."""
+    V, K = 5, 3
+    sp = SamplingParams(temperature=1.0)
+    logits0 = np.array([2.0, 1.0, 0.5, 0.0, -1.0], np.float32)
+    target = np.exp(logits0) / np.exp(logits0).sum()
+    logits = jnp.asarray(np.tile(logits0, (1, K + 1, 1)).astype(np.float32))
+    n = 4000
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    verify = jax.vmap(lambda key, dr: spec_verify(logits, dr, key, sp)[1],
+                      in_axes=(0, None))
+    for draft_tok in (0, 4):              # likely and unlikely proposals
+        draft = jnp.full((1, K), draft_tok, jnp.int32)
+        out = np.asarray(verify(keys, draft))        # [n, 1, K+1]
+        freq = np.bincount(out[:, 0, 0], minlength=V) / n
+        # ~3 sigma for the largest bin at n=4000 is ~0.023
+        np.testing.assert_allclose(freq, target, atol=0.05)
+
+
+def test_spec_verify_rejection_resample_excludes_draft_token():
+    """On rejection the residual distribution zeroes the rejected draft
+    token (q is a point mass), so a draft with target probability ~0 can
+    never be emitted at its own position."""
+    V, K = 4, 2
+    sp = SamplingParams(temperature=1.0)
+    logits0 = np.array([10.0, 0.0, 0.0, -30.0], np.float32)  # p(3) ~= 0
+    logits = jnp.asarray(np.tile(logits0, (1, K + 1, 1)).astype(np.float32))
+    draft = jnp.full((1, K), 3, jnp.int32)  # propose the impossible token
+    keys = jax.random.split(jax.random.PRNGKey(0), 500)
+    n_acc, out = jax.vmap(lambda k: spec_verify(logits, draft, k, sp))(keys)
+    assert (np.asarray(n_acc) == 0).all()  # p(draft) ~ 0 -> always rejected
+    assert (np.asarray(out)[:, 0, 0] != 3).all()
+
+
+# ---------------------------------------------------------------------------
+# sampling filter edge cases
+# ---------------------------------------------------------------------------
+
+def test_top_k_equal_to_vocab_is_disabled():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    full = sample(logits, key, SamplingParams(temperature=1.0, top_k=8))
+    off = sample(logits, key, SamplingParams(temperature=1.0, top_k=0))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(off))
+    # and the filter itself must keep every logit finite
+    f = filter_logits(logits, SamplingParams(temperature=1.0, top_k=8))
+    assert np.isfinite(np.asarray(f)).all()
+
+
+def test_top_p_ties_at_cutoff_keep_all_tied_tokens():
+    """Two tokens tie exactly at the nucleus cutoff: both must survive
+    (the filter drops strictly-below-cutoff logits only), so sampling
+    support is {0, 1} and never collapses to one arbitrary winner."""
+    logits = jnp.asarray([[0.0, 0.0, -20.0, -20.0]])
+    f = np.asarray(filter_logits(logits,
+                                 SamplingParams(temperature=1.0, top_p=0.5)))
+    assert np.isfinite(f[0, 0]) and np.isfinite(f[0, 1])
+    assert f[0, 2] == -np.inf and f[0, 3] == -np.inf
+    draws = {int(sample(logits, jax.random.PRNGKey(i),
+                        SamplingParams(temperature=1.0, top_p=0.5))[0])
+             for i in range(50)}
+    assert draws == {0, 1}
+
+
+def test_temperature_to_zero_limit_equals_greedy():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    greedy = np.asarray(sample(logits, jax.random.PRNGKey(0),
+                               SamplingParams()))
+    for t in (1e-3, 1e-5):
+        cold = np.asarray(sample(logits, jax.random.PRNGKey(0),
+                                 SamplingParams(temperature=t)))
+        np.testing.assert_array_equal(cold, greedy)
+
+
+# ---------------------------------------------------------------------------
+# draft profiles
+# ---------------------------------------------------------------------------
+
+def test_draft_profiles_pack_and_run():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.model_compress import (DRAFT_PROFILES, compress_draft,
+                                           draft_layers)
+    from repro.models.registry import get_model
+
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    for profile in DRAFT_PROFILES:
+        draft = compress_draft(params, cfg, profile=profile)
+        dl = draft_layers(cfg, profile)
+        assert 1 <= dl <= cfg.n_layers
+        dcfg = dataclasses.replace(cfg, n_layers=dl)
+        logits, _ = api.forward(draft, {"tokens": toks}, dcfg)
+        assert logits.shape == (1, 4, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+    with pytest.raises(ValueError):
+        compress_draft(params, cfg, profile="nope")
+    with pytest.raises(ValueError):
+        draft_layers(cfg, "nope")
