@@ -31,6 +31,31 @@ except ImportError:      # direct `python benchmarks/serve_engine.py` run
     from common import emit, write_bench_json
 
 
+def decode_attention_series(cfg, ctx: int = 1024, page_size: int = 16):
+    """Per-step decode-attention time at the serve model's head geometry
+    (one layer, ragged [B=4] batch at ``ctx``): dense full-table gather
+    (pre-PR hot path) vs the occupied-page-clamped reference the engine
+    now runs off-TPU. Tracks the decode-attention share of the serve
+    trajectory across PRs (the fused kernel's own win is O(live tokens)
+    HBM traffic — see benchmarks/paged_attn.py, whose ``make_case``
+    supplies the workload so the table/sentinel convention has one
+    definition)."""
+    try:
+        from benchmarks.paged_attn import make_case, time_dense_vs_clamped
+    except ImportError:
+        from paged_attn import make_case, time_dense_vs_clamped
+    case = make_case(ctx, page_size, 1, b=4, kh=cfg.n_kv_heads,
+                     r=cfg.n_heads // cfg.n_kv_heads, d=cfg.hd)
+    us_dense, us_clamp = time_dense_vs_clamped(case)
+    emit("serve_decode_attn_dense", us_dense,
+         f"per-layer decode attention, dense [B,{case[4].shape[1]}]-page "
+         f"gather @ ctx {ctx}")
+    emit("serve_decode_attn_clamped", us_clamp,
+         f"occupied-page clamp: {us_dense / max(us_clamp, 1e-9):.2f}x "
+         f"vs dense @ ctx {ctx}",
+         speedup_vs_dense=us_dense / max(us_clamp, 1e-9))
+
+
 def seed_loop(cfg, params, prompts: List[np.ndarray], slots: int,
               max_new: int, max_seq: int) -> dict:
     """The seed repo's serving loop, verbatim semantics: shared position
@@ -139,6 +164,7 @@ def main(argv=None):
              tok_per_s=eng["tok_per_s"], speedup_vs_seed=speedup,
              ttft_ms_p50=eng["ttft_ms_p50"],
              tpot_ms_p50=eng["tpot_ms_p50"])
+    decode_attention_series(cfg)
     print(f"# engine vs seed-loop speedups: "
           f"{', '.join(f'{s:.1f}x' for s in speedups)}")
     write_bench_json()

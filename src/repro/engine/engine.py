@@ -75,15 +75,19 @@ def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
         return first, cache, rng
 
     def decode_fn(params, cache, tokens, positions, block_tables,
-                  active, rng):
+                  active, rng, max_live):
         logits, cache = api.decode_step(params, cache, tokens[:, None],
                                         positions, cfg, None, use_pallas,
-                                        block_tables=block_tables)
+                                        block_tables=block_tables,
+                                        max_live_pages=max_live)
         rng, sub = jax.random.split(rng)
         nxt = sample(logits[:, -1, :], sub, sampling)
         return nxt, positions + active, cache, rng
 
-    return jax.jit(prefill_fn), jax.jit(decode_fn)
+    # max_live is static: it clamps the block tables to the batch's max
+    # occupied page count (pow2-bucketed by the engine, so at most
+    # log2(max_pages_per_slot) retraces per engine lifetime)
+    return jax.jit(prefill_fn), jax.jit(decode_fn, static_argnums=(7,))
 
 
 class InferenceEngine:
@@ -105,12 +109,6 @@ class InferenceEngine:
         self.sampling = sampling
         self.api = api
         self.spec = engine_cfg.spec_k > 0
-        if engine_cfg.use_pallas and cfg.kv_cache_dtype == "int8":
-            import warnings
-            warnings.warn(
-                "paged decode attention has no pallas kernel yet: linears "
-                "run the pallas path but int8 decode attention falls back "
-                "to the jnp reference", stacklevel=2)
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
                                engine_cfg.num_pages,
@@ -125,6 +123,7 @@ class InferenceEngine:
         self._active = jnp.zeros((b,), jnp.int32)
         self._remaining = jnp.zeros((b,), jnp.int32)   # per-slot budget left
         self._block_tables = self.kv.device_block_tables()
+        self._max_live = self.kv.max_pages_per_slot    # static, pow2-bucketed
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
         # spec mode log: (tokens [B, K+1], counts [B]) per prefill/round
         self._spec_log: List = []
@@ -186,7 +185,7 @@ class InferenceEngine:
             self._tokens, self._positions, self.kv.data, self._rng = \
                 self._decode_fn(self.params, self.kv.data, self._tokens,
                                 self._positions, self._block_tables,
-                                self._active, self._rng)
+                                self._active, self._rng, self._max_live)
             idx = len(self._token_log)
             self._token_log.append(self._tokens)
             for r in sch.active():
@@ -213,12 +212,12 @@ class InferenceEngine:
         for _ in range(rounds):
             draft = self._draft_fn(
                 self.draft_params, self.kv.data, self._tokens,
-                self._positions, self._block_tables)
+                self._positions, self._block_tables, self._max_live)
             (out, n_new, self._tokens, self._positions, self._remaining,
              self.kv.data, self._rng) = self._verify_fn(
                 self.params, self.kv.data, self._tokens, draft,
                 self._positions, self._block_tables, self._active,
-                self._remaining, self._rng)
+                self._remaining, self._rng, self._max_live)
             idx = self._log_spec(out, n_new)
             round_idxs.append(idx)
             for r in sch.active():
@@ -298,6 +297,12 @@ class InferenceEngine:
         """Refresh device copies of the block tables + active mask +
         per-slot budgets after a scheduling event (admission/eviction)."""
         self._block_tables = self.kv.device_block_tables()
+        # static clamp for the decode-side page gather / kernel grid: the
+        # batch's max occupied page count, pow2-bucketed so the jitted
+        # steps retrace at most log2(max_pages_per_slot) times
+        occ = int((self.kv.block_tables != self.kv.sentinel).sum(1).max())
+        self._max_live = min(_bucket(max(occ, 1), 1),
+                             self.kv.max_pages_per_slot)
         act = np.zeros((self.ecfg.num_slots,), np.int32)
         rem = np.zeros((self.ecfg.num_slots,), np.int32)
         for i, slot in enumerate(self.scheduler.slots):

@@ -35,7 +35,7 @@ from repro.models.registry import get_model
 def build_draft_fn(cfg, api, use_pallas: bool, k: int,
                    draft_layers: Optional[int] = None):
     """Returns draft_fn(draft_params, cache, tokens, positions,
-    block_tables) -> draft_tokens [B, K].
+    block_tables, max_live) -> draft_tokens [B, K].
 
     ``tokens`` [B] is each slot's last sampled-but-unfed token;
     ``positions`` [B] its write position. Greedy by construction: the
@@ -48,7 +48,8 @@ def build_draft_fn(cfg, api, use_pallas: bool, k: int,
     dcfg = dataclasses.replace(cfg, n_layers=dl) if dl != cfg.n_layers \
         else cfg
 
-    def draft_fn(draft_params, cache, tokens, positions, block_tables):
+    def draft_fn(draft_params, cache, tokens, positions, block_tables,
+                 max_live=None):
         dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
             if dl != cfg.n_layers else cache
         toks = tokens
@@ -56,7 +57,8 @@ def build_draft_fn(cfg, api, use_pallas: bool, k: int,
         for j in range(k):
             logits, dcache = api.decode_step(
                 draft_params, dcache, toks[:, None], positions + j, dcfg,
-                None, use_pallas, block_tables=block_tables)
+                None, use_pallas, block_tables=block_tables,
+                max_live_pages=max_live)
             toks = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             drafts.append(toks)
         return jnp.stack(drafts, axis=1)
@@ -73,4 +75,7 @@ def spec_step_fns(cfg, sampling: SamplingParams, use_pallas: bool, k: int,
     api = get_model(cfg)
     draft_fn = build_draft_fn(cfg, api, use_pallas, k, draft_layers)
     verify_fn = build_verify_fn(cfg, api, sampling, use_pallas, k)
-    return jax.jit(draft_fn), jax.jit(verify_fn)
+    # the trailing max_live (occupied-page clamp, see engine._step_fns)
+    # is static in both
+    return (jax.jit(draft_fn, static_argnums=(5,)),
+            jax.jit(verify_fn, static_argnums=(9,)))

@@ -23,7 +23,7 @@ from repro.engine.sampling import SamplingParams, spec_verify
 def build_verify_fn(cfg, api, sampling: SamplingParams, use_pallas: bool,
                     k: int):
     """Returns verify_fn(params, cache, tokens, draft_tokens, positions,
-    block_tables, active, remaining, rng) ->
+    block_tables, active, remaining, rng, max_live) ->
     (out [B, K+1], n_new [B], tokens', positions', remaining', cache, rng).
 
     ``remaining`` [B] is each slot's generation budget left; ``n_new`` is
@@ -33,11 +33,11 @@ def build_verify_fn(cfg, api, sampling: SamplingParams, use_pallas: bool,
     """
 
     def verify_fn(params, cache, tokens, draft_tokens, positions,
-                  block_tables, active, remaining, rng):
+                  block_tables, active, remaining, rng, max_live=None):
         feed = jnp.concatenate([tokens[:, None], draft_tokens], axis=1)
         logits, cache = api.decode_step(
             params, cache, feed, positions, cfg, None, use_pallas,
-            block_tables=block_tables)
+            block_tables=block_tables, max_live_pages=max_live)
         rng, sub = jax.random.split(rng)
         n_acc, out = spec_verify(logits, draft_tokens, sub, sampling)
         n_new = jnp.minimum(n_acc + 1, remaining) * active      # [B]

@@ -153,16 +153,60 @@ def dense_bytes_model(n: int, k: int, batch: int = 1,
                 flops=2 * batch * n * k)
 
 
+def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
+                           k_scale_pages=None, v_scale_pages=None, *,
+                           use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """Fused decode attention directly on the paged KV pool.
+
+    q: [B, T, H, D] (T=1 continuous-batching decode; T=K+1 speculative
+    verify); k/v_pages: [P, ps, KH, D] (bf16/f32, or int8 with f32
+    [P, ps, KH] scale pages); lengths: [] / [B] / [B, T] per-query valid
+    prefix (the multi-token staircase); block_tables: [B, MP] page ids,
+    entries >= P are out-of-range sentinels. Returns [B, T, H, D] f32.
+
+    The Pallas path streams only each slot's live pages through VMEM —
+    O(live tokens) HBM traffic; the jnp path is the dense-gather
+    reference (`kernels/ref.py:paged_attention_ref`, identical math).
+    """
+    if not use_pallas:
+        return kref.paged_attention_ref(q, k_pages, v_pages, lengths,
+                                        block_tables, k_scale_pages,
+                                        v_scale_pages)
+    if interpret is None:
+        interpret = not _on_tpu()
+    from repro.kernels.paged_attention import paged_attention_pallas
+    from repro.models.layers import _query_lengths
+    b, t, h, d = q.shape
+    page_size = k_pages.shape[1]
+    khn = k_pages.shape[2]
+    r = h // khn
+    mp = block_tables.shape[1]
+    lq = _query_lengths(lengths, b, t).astype(jnp.int32)     # [B, T]
+    # kernel row layout: [B, KH, T*R, D], T-major inside the row dim
+    qh = q.reshape(b, t, khn, r, d).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, khn, t * r, d)
+    live = jnp.clip(
+        (jnp.max(lq, axis=1) + page_size - 1) // page_size, 0, mp)
+    o = paged_attention_pallas(qh, k_pages, v_pages, lq, block_tables,
+                               live, k_scale_pages, v_scale_pages,
+                               t=t, interpret=interpret)
+    return o.reshape(b, khn, t, r, d).transpose(0, 2, 1, 3, 4) \
+            .reshape(b, t, h, d)
+
+
 def kv_decode_attention(q, k_cache, k_scale, v_cache, v_scale, length, *,
                         use_pallas: bool = True, block_s: int = 512,
                         interpret: Optional[bool] = None):
-    """int8-KV decode attention. q: [B, KH, R, D] -> [B, KH, R, D] f32."""
-    from repro.kernels.kv_decode import kv_decode_attention_pallas
+    """int8-KV decode attention over a *contiguous* cache — the degenerate
+    one-page-table case of the paged kernel: the [B, S, ...] cache is
+    viewed as B*ceil(S/block_s) pages of ``block_s`` tokens with identity
+    block tables (no data movement beyond the pad). q: [B, KH, R, D] ->
+    [B, KH, R, D] f32."""
     if not use_pallas:
         return kref.kv_decode_attention_ref(q, k_cache, k_scale, v_cache,
                                             v_scale, length)
-    if interpret is None:
-        interpret = not _on_tpu()
+    b, khn, r, d = q.shape
     s = k_cache.shape[1]
     block_s = min(block_s, s)
     pad = (-s) % block_s
@@ -171,6 +215,15 @@ def kv_decode_attention(q, k_cache, k_scale, v_cache, v_scale, length, *,
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
         v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
-    return kv_decode_attention_pallas(q, k_cache, k_scale, v_cache, v_scale,
-                                      length, block_s=block_s,
-                                      interpret=interpret)
+    npg = (s + pad) // block_s
+
+    def pages(buf):                      # [B, S, ...] -> [B*NP, bs, ...]
+        return buf.reshape((b * npg, block_s) + buf.shape[2:])
+
+    bt = jnp.arange(b * npg, dtype=jnp.int32).reshape(b, npg)
+    o = paged_decode_attention(
+        q.reshape(b, 1, khn * r, d), pages(k_cache), pages(v_cache),
+        jnp.broadcast_to(jnp.reshape(length, (-1,)), (b,)), bt,
+        pages(k_scale), pages(v_scale), use_pallas=True,
+        interpret=interpret)
+    return o.reshape(b, khn, r, d)

@@ -1,0 +1,207 @@
+"""Fused paged-attention decode kernel — Pallas TPU (DESIGN.md §7).
+
+Decode attention computed *in place* on the paged KV pool: no dense
+per-step page gather. The engine's previous hot path materialized every
+slot's block-table pages into a `[B, MP*ps, KH, D]` copy each layer,
+each step — O(B * max_pages) HBM traffic regardless of how long the
+sequences actually are. This kernel streams only the *live* pages of
+each slot through VMEM, so per-step attention traffic is O(live tokens).
+
+Layouts (one layer's view of the pool):
+    q             [B, KH, T*R, D]      query rows grouped by KV head,
+                                       T-major inside the row dim
+    k/v_pages     [P, ps, KH, D]       bf16/f32, or int8 with
+    k/v_scale     [P, ps, KH] f32      per-token x head scales
+    lengths       [B, T] int32         per-query valid prefix (staircase:
+                                       query t of a slot sees cache
+                                       positions < lengths[b, t])
+    block_tables  [B, MP] int32        page ids; entries >= P are
+                                       out-of-range sentinels
+    live          [B] int32            number of live pages per slot
+                                       (= ceil(max_t lengths / ps))
+    out           [B, KH, T*R, D] f32
+
+Grid: (B, KH, MP) — pages innermost so the (m, l, acc) VMEM scratch
+carries the online softmax across one slot/kv-head's page stream.
+
+Three mechanisms kill the dense gather's waste:
+
+* **Scalar-prefetched block tables drive the DMA.** The K/V BlockSpec
+  index maps read `block_tables[b, page_idx]` directly, so each grid
+  step fetches one *pool page* — the copy to a dense per-slot buffer
+  never exists.
+* **Dead pages are never fetched.** For grid steps past a slot's live
+  page count the index map clamps to the last live page; Pallas elides
+  the DMA when consecutive steps map to the same block, and `pl.when`
+  skips the compute entirely. Sentinel entries (>= P) clamp to page
+  P - 1 — exactly XLA's OOB-gather clip, so the jnp reference and the
+  kernel read identical (masked) garbage and stay bit-comparable.
+* **int8 pages dequantize on VMEM tiles.** HBM traffic is the int8
+  payload (half of bf16); the f32 dequant + contraction happen on the
+  in-VMEM tile, mirroring the contiguous int8 decode kernel this module
+  absorbed (the former ``kv_decode.py``; see
+  :func:`ops.kv_decode_attention` for the degenerate one-page-table
+  wrapper). The score/value contractions stay f32-after-dequant — an
+  online softmax cannot know the global softmax-weight amax that the
+  jnp ``decode_attention_int8`` path uses to re-quantize p, and the
+  dequant form is what keeps the folded contiguous parity at 1e-4.
+
+T > 1 covers the speculative-decoding verify step (T = K+1 per-slot
+short-prefill): causality inside the block comes from the per-query
+staircase ``lengths``, identical to the jnp reference's masking.
+
+Rows (T*R) and D are used as-is — adequate for interpret mode (the
+repo's off-TPU convention) and for MXU-friendly head dims; a deployment
+at exotic head dims should pad rows to the sublane multiple in
+``ops.paged_decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, live_ref,                       # scalar prefetch
+            len_ref, q_ref, k_ref, v_ref,           # VMEM in (bf16/f32)
+            o_ref,                                  # VMEM out
+            m_ref, l_ref, acc_ref,                  # scratch
+            *, page_size: int, t: int, r: int,
+            ks_ref=None, vs_ref=None):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    npg = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # pages at/above the live count were not (re)fetched — skip compute
+    @pl.when(pi < live_ref[bi])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)          # [TR, D]
+        d = q.shape[-1]
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+        # dequantize this page tile in VMEM (HBM traffic stays int8)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # [ps, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
+
+        sco = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [TR, ps]
+
+        # per-query staircase mask: query t sees positions < lengths[b, t]
+        pos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (t, page_size), 1)
+        lq = len_ref[0]                              # [T]
+        valid = pos < lq[:, None]                    # [T, ps]
+        valid = jnp.broadcast_to(valid[:, None, :],
+                                 (t, r, page_size)).reshape(t * r, page_size)
+        sco = jnp.where(valid, sco, -jnp.inf)
+
+        m_old = m_ref[:, 0]
+        m_new = jnp.maximum(m_old, jnp.max(sco, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(sco - m_safe[:, None])
+        p = jnp.where(jnp.isinf(sco), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isinf(m_old), -jnp.inf, m_old) - m_safe)
+        corr = jnp.where(jnp.isinf(m_old), 0.0, corr)
+
+        l_new = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+        acc_new = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        acc_ref[...] = acc_new
+
+    @pl.when(pi == npg - 1)
+    def _finalize():
+        # fully-masked rows (length 0, e.g. row padding) have l == 0 and
+        # finalize to exact zeros rather than NaN
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,            # [B, KH, T*R, D]
+    k_pages: jnp.ndarray,      # [P, ps, KH, D] bf16/f32/int8
+    v_pages: jnp.ndarray,
+    lengths: jnp.ndarray,      # [B, T] int32 per-query valid prefix
+    block_tables: jnp.ndarray,  # [B, MP] int32 (>= P entries = sentinel)
+    live_pages: jnp.ndarray,   # [B] int32 live page count per slot
+    k_scale_pages=None,        # [P, ps, KH] f32 (int8 pages only)
+    v_scale_pages=None,
+    *,
+    t: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, KH, T*R, D] f32. See module docstring for semantics."""
+    b, khn, tr, d = q.shape
+    r = tr // t
+    num_pages, page_size = k_pages.shape[0], k_pages.shape[1]
+    mp = block_tables.shape[1]
+    int8 = k_scale_pages is not None
+    grid = (b, khn, mp)
+
+    def page_map(bi, ki, pi, bt, live):
+        # steps past the live prefix re-map to the last live page so the
+        # block index is unchanged and Pallas elides the DMA; sentinel
+        # entries clamp to P - 1 (== XLA's OOB-gather clip)
+        pe = jnp.minimum(pi, jnp.maximum(live[bi] - 1, 0))
+        return (jnp.minimum(bt[bi, pe], num_pages - 1), 0, ki, 0)
+
+    def scale_map(bi, ki, pi, bt, live):
+        pe = jnp.minimum(pi, jnp.maximum(live[bi] - 1, 0))
+        return (jnp.minimum(bt[bi, pe], num_pages - 1), 0, ki)
+
+    in_specs = [
+        pl.BlockSpec((1, t), lambda bi, ki, pi, bt, live: (bi, 0)),
+        pl.BlockSpec((1, 1, tr, d), lambda bi, ki, pi, bt, live:
+                     (bi, ki, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d), page_map),
+        pl.BlockSpec((1, page_size, 1, d), page_map),
+    ]
+    args = [lengths.astype(jnp.int32), q, k_pages, v_pages]
+    kern = functools.partial(_kernel, page_size=page_size, t=t, r=r)
+    if int8:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
+                     pl.BlockSpec((1, page_size, 1), scale_map)]
+        args += [k_scale_pages, v_scale_pages]
+
+        def kern(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref,
+                 ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref):
+            return _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref,
+                           o_ref, m_ref, l_ref, acc_ref,
+                           page_size=page_size, t=t, r=r,
+                           ks_ref=ks_ref, vs_ref=vs_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, tr, d),
+                               lambda bi, ki, pi, bt, live: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tr, 128), jnp.float32),   # running max (lane-padded)
+            pltpu.VMEM((tr, 128), jnp.float32),   # running denom
+            pltpu.VMEM((tr, d), jnp.float32),     # unnormalized output
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, khn, tr, d), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), live_pages.astype(jnp.int32), *args)

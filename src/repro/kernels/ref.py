@@ -76,3 +76,45 @@ def kv_decode_attention_ref(q, k_cache, k_scale, v_cache, v_scale, length,
     p = jax.nn.softmax(sco, axis=-1)
     o = jnp.einsum("bkrs,bskd->bkrd", p, v)
     return o.astype(dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
+                        k_scale_pages=None, v_scale_pages=None,
+                        dtype=jnp.float32):
+    """Oracle + GSPMD/dry-run path for the paged decode attention kernel.
+
+    Dense page gather (what the kernel avoids) followed by staircase
+    attention — identical math to the Pallas kernel: dequantize int8
+    pages, f32 score/value contractions, per-query length mask.
+
+    q: [B, T, H, D] (T=1 decode, T=K+1 speculative verify);
+    k/v_pages: [P, ps, KH, D] (int8 variants add [P, ps, KH] scales);
+    lengths: [] / [B] / [B, T] per-query valid prefix; block_tables:
+    [B, MP] page ids — entries >= P are sentinels and clamp to P - 1
+    (XLA's OOB-gather clip), their positions masked by ``lengths``.
+    Rows whose length is 0 softmax over an empty set and return NaN
+    (the kernel returns 0 there); callers mask such rows either way.
+    """
+    from repro.models.layers import staircase_mask
+    b, t, h, d = q.shape
+    num_pages, ps, khn, _ = k_pages.shape
+    r = h // khn
+
+    def view(buf):                       # [P, ps, ...] -> [B, MP*ps, ...]
+        g = buf[jnp.minimum(block_tables, num_pages - 1)]
+        return g.reshape((b, -1) + buf.shape[2:])
+
+    k = view(k_pages).astype(jnp.float32)
+    v = view(v_pages).astype(jnp.float32)
+    if k_scale_pages is not None:
+        k = k * view(k_scale_pages)[..., None]
+        v = v * view(v_scale_pages)[..., None]
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qh = q.reshape(b, t, khn, r, d).astype(jnp.float32)
+    sco = jnp.einsum("btkrd,bskd->bkrts", qh, k) * scale
+    valid = staircase_mask(lengths, b, t, s)               # [B, T, S]
+    sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
+    o = jnp.einsum("bkrts,bskd->btkrd", p, v)
+    return o.reshape(b, t, h, d).astype(dtype)

@@ -77,7 +77,11 @@ def main(argv=None):
     ap.add_argument("--draft-profile", default="w4s75",
                     choices=list_draft_profiles(),
                     help="draft compression of the same checkpoint")
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="Pallas kernel path (interpret off-TPU): packed "
+                         "linears AND the fused paged-attention decode "
+                         "kernel (attends in place on the KV pool; the "
+                         "jnp reference gathers pages densely)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

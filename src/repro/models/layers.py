@@ -286,6 +286,17 @@ def _query_lengths(length: jnp.ndarray, b: int, t: int) -> jnp.ndarray:
     return jnp.broadcast_to(l, (b, t))
 
 
+def staircase_mask(length: jnp.ndarray, b: int, t: int, s: int) -> jnp.ndarray:
+    """[B, T, S] validity: cache position s is visible to query (b, t) iff
+    s < lq[b, t]. The SINGLE definition of the multi-token staircase
+    (T = K+1 speculative verify causality; T = 1 degenerates to a plain
+    prefix mask) — shared by :func:`decode_attention`,
+    :func:`decode_attention_int8` and the paged-attention kernel oracle
+    (`kernels/ref.py:paged_attention_ref`)."""
+    lq = _query_lengths(length, b, t)
+    return jnp.arange(s)[None, None, :] < lq[..., None]
+
+
 def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
                           k_scale: jnp.ndarray, v_cache: jnp.ndarray,
                           v_scale: jnp.ndarray,
@@ -314,9 +325,7 @@ def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
            * q_sc.transpose(0, 2, 3, 1)[..., None]
            * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
            * scale)
-    pos = jnp.arange(s)
-    lq = _query_lengths(length, b, t)                      # [B, T]
-    valid = pos[None, None, :] < lq[..., None]             # [B, T, S]
+    valid = staircase_mask(length, b, t, s)                # [B, T, S]
     sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
     p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     # fold the per-position value scale into p, then quantize p to int8
@@ -350,9 +359,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     qh = q.reshape(b, t, khn, r, d).astype(k_cache.dtype)
     sco = jnp.einsum("btkrd,bskd->bkrts", qh, k_cache,
                      preferred_element_type=jnp.float32) * scale
-    pos = jnp.arange(s)
-    lq = _query_lengths(length, b, t)                      # [B, T]
-    valid = pos[None, None, :] < lq[..., None]             # [B, T, S]
+    valid = staircase_mask(length, b, t, s)                # [B, T, S]
     sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
     p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     o = jnp.einsum("bkrts,bskd->btkrd", p.astype(v_cache.dtype), v_cache,
@@ -518,8 +525,18 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
 
     Causality inside the T block comes from the per-query staircase
     length (query t sees cache positions < positions + t + 1); the K/V of
-    all T tokens are scattered before the gather, so later queries attend
-    to earlier fed tokens exactly as a sequential decode would.
+    all T tokens are scattered before the attention reads them, so later
+    queries attend to earlier fed tokens exactly as a sequential decode
+    would.
+
+    With ``use_pallas`` the attention runs the fused paged kernel
+    (`kernels/paged_attention.py`): it streams each slot's live pages
+    through VMEM directly — the dense `[B, MP*ps, ...]` page gather
+    below exists only on the jnp reference path (GSPMD / dry-run), and
+    even there the engine clamps ``block_tables`` to the batch's max
+    *occupied* page count before calling in (``decode_step``'s
+    ``max_live_pages``), so the reference never pays for unallocated
+    pages either.
     """
     b, t, _ = x.shape
     kp = cache["k_pages"]
@@ -546,15 +563,27 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                "v_pages": write(cache["v_pages"], v_i8),
                "k_scale_pages": write(cache["k_scale_pages"], k_sc),
                "v_scale_pages": write(cache["v_scale_pages"], v_sc)}
-        o = decode_attention_int8(q, view(new["k_pages"]),
-                                  view(new["k_scale_pages"]),
-                                  view(new["v_pages"]),
-                                  view(new["v_scale_pages"]), length)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            o = kops.paged_decode_attention(
+                q, new["k_pages"], new["v_pages"], length, block_tables,
+                new["k_scale_pages"], new["v_scale_pages"]).astype(q.dtype)
+        else:
+            o = decode_attention_int8(q, view(new["k_pages"]),
+                                      view(new["k_scale_pages"]),
+                                      view(new["v_pages"]),
+                                      view(new["v_scale_pages"]), length)
     else:
         new = {"k_pages": write(kp, k),
                "v_pages": write(cache["v_pages"], v)}
-        o = decode_attention(q, view(new["k_pages"]), view(new["v_pages"]),
-                             length)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            o = kops.paged_decode_attention(
+                q, new["k_pages"], new["v_pages"], length,
+                block_tables).astype(q.dtype)
+        else:
+            o = decode_attention(q, view(new["k_pages"]),
+                                 view(new["v_pages"]), length)
     y = apply_linear(p["wo"], o.reshape(b, t, -1), use_pallas=use_pallas)
     return y, new
 

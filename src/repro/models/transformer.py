@@ -253,17 +253,29 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
 
 def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False,
-                block_tables=None) -> Tuple[jnp.ndarray, Dict]:
+                block_tables=None, max_live_pages: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
     """tokens: [B, T]; pos: scalar shared step index OR [B] per-slot
     positions. ``cache`` is either the contiguous cache from
     :func:`init_cache` (T must be 1) or the paged view from
     :func:`init_paged_cache` (then ``block_tables`` [B, MP] is required
     and T may exceed 1: token t is written/attended at pos + t — the
     speculative-decoding verify step's per-slot short-prefill).
-    Returns (logits [B, T, V], cache)."""
+
+    ``max_live_pages`` (static) clamps the block tables to the batch's
+    max *occupied* page count: every slot's allocation (prompt + budget
+    + lookahead) fits in the leading entries, so the trailing all-
+    sentinel columns carry no information — dropping them shrinks the
+    jnp reference's dense page gather and the Pallas kernel's grid from
+    O(max_pages) to O(occupied pages). The engine buckets the value
+    (pow2) so retraces stay bounded. Returns (logits [B, T, V], cache).
+    """
     paged = isinstance(cache, dict) and "k_pages" in cache
     if paged and block_tables is None:
         raise ValueError("paged cache decode requires block_tables")
+    if paged and max_live_pages is not None:
+        block_tables = block_tables[
+            :, :max(1, min(max_live_pages, block_tables.shape[1]))]
     h = embed_tokens(params, tokens, cfg)
 
     def body(hh, xs):
