@@ -47,6 +47,16 @@ DEFAULT_DRAFT_PROFILE = "w4l12"
 # (high acceptance, expensive drafts), aggressive width sparsity, and
 # the depth-pruned default
 PROFILES = ("self", "w4", "w4s75", "w4l12")
+# token-tree sweep (DESIGN.md §8): trees buy accepted length exactly
+# where chains collapse — a drafter whose top-1 acceptance is poor but
+# whose top-k sibling set covers the target. w2s75 is that drafter here
+# (chain top-1 acceptance ~0.3; top-2-per-depth coverage ~0.7), and the
+# comparison currency is mean ACCEPTED DRAFTS PER VERIFY DISPATCH at
+# EQUAL verify token budget: tree fanout F (N nodes, T = N+1) vs chain
+# K = N (same T). Greedy, so accepted lengths are deterministic.
+TREE_DRAFT_PROFILE = "w2s75"
+TREE_FANOUTS = ((2, 2), (4, 2), (2, 2, 2))
+HEADLINE_FANOUT = (2, 2, 2)
 
 
 def bench_prompts(cfg, n, lens=(12, 20, 8, 16)):
@@ -57,11 +67,12 @@ def bench_prompts(cfg, n, lens=(12, 20, 8, 16)):
 
 
 def make_runner(cfg, params, prompts, *, slots, max_new, max_seq, spec_k=0,
-                draft=None, draft_layers=None):
+                spec_fanout=None, draft=None, draft_layers=None):
     def once():
         eng = InferenceEngine(
             cfg, params,
             EngineConfig(num_slots=slots, max_seq=max_seq, spec_k=spec_k,
+                         spec_fanout=spec_fanout,
                          spec_draft_layers=draft_layers),
             SamplingParams(), draft_params=draft)
         for p in prompts:
@@ -153,8 +164,64 @@ def main(argv=None):
           + ", ".join(f"{p}={s:.2f}x" for p, s in speedups.items()))
     print(f"# default profile {DEFAULT_DRAFT_PROFILE}: {default:.2f}x "
           f"(bar: >= 1.5x)")
+
+    tree_results = tree_sweep(cfg, fp_params, target, prompts, args,
+                              base_out)
     write_bench_json()
-    return speedups
+    return speedups, tree_results
+
+
+def tree_sweep(cfg, fp_params, target, prompts, args, base_out):
+    """Token-tree fanout sweep (DESIGN.md §8): for each fanout F (N
+    nodes) run the tree AND the equal-verify-budget chain K = N with the
+    same weak drafter, and emit accepted drafts per verify dispatch +
+    decode tok/s. Greedy acceptance is deterministic, so the headline
+    bar — tree accepted length STRICTLY above the chain at equal budget
+    — needs no repeat averaging; wall-clock keeps the best of 2 passes
+    (1 compile + 1 timed) like the profile sweep."""
+    from repro.engine.spec import TreeTemplate
+
+    draft = compress_draft(fp_params, cfg, profile=TREE_DRAFT_PROFILE)
+    dl = draft_layers(cfg, TREE_DRAFT_PROFILE)
+    kw = dict(slots=args.slots, max_new=args.max_new, max_seq=args.max_seq)
+    results = {}
+    for fanout in TREE_FANOUTS:
+        n = TreeTemplate(fanout).n_nodes
+        tree_once = make_runner(cfg, target, prompts, spec_fanout=fanout,
+                                draft=draft, draft_layers=dl, **kw)
+        chain_once = make_runner(cfg, target, prompts, spec_k=n,
+                                 draft=draft, draft_layers=dl, **kw)
+        mt, rt = best_of([tree_once() for _ in range(2)])
+        mk, rk = best_of([chain_once() for _ in range(2)])
+        assert {q["rid"]: list(q["tokens"]) for q in rt} == base_out, \
+            f"tree spec output diverged from target ({fanout})"
+        assert {q["rid"]: list(q["tokens"]) for q in rk} == base_out, \
+            f"chain-{n} spec output diverged from target"
+        name = "x".join(str(f) for f in fanout)
+        results[fanout] = (mt["accepted_len_mean"], mk["accepted_len_mean"])
+        emit(f"spec_tree_{name}", mt["itl_ms_mean"] * 1e3,
+             f"{1e3 / mt['itl_ms_mean']:.1f} decode tok/s, "
+             f"{mt['accepted_len_mean']:.2f} accepted/verify vs "
+             f"{mk['accepted_len_mean']:.2f} chain-K{n} at equal "
+             f"T={n + 1} verify budget ({TREE_DRAFT_PROFILE})",
+             decode_tok_per_s=1e3 / mt["itl_ms_mean"],
+             accepted_len_per_verify=mt["accepted_len_mean"],
+             chain_equal_budget_accepted_len=mk["accepted_len_mean"],
+             chain_equal_budget_tok_per_s=1e3 / mk["itl_ms_mean"],
+             verify_tokens_per_round=n + 1,
+             acceptance_rate=mt["acceptance_rate"],
+             draft_profile=TREE_DRAFT_PROFILE, lossless=True)
+    tree_alen, chain_alen = results[HEADLINE_FANOUT]
+    print("# token-tree accepted/verify vs equal-budget chain "
+          f"({TREE_DRAFT_PROFILE}): "
+          + ", ".join(f"{f}={t:.2f} (chain {c:.2f})"
+                      for f, (t, c) in results.items()))
+    assert tree_alen > chain_alen, (
+        f"tree {HEADLINE_FANOUT} accepted length {tree_alen:.3f} not above "
+        f"equal-budget chain {chain_alen:.3f}")
+    print(f"# headline {HEADLINE_FANOUT}: {tree_alen:.2f} accepted/verify "
+          f"> chain {chain_alen:.2f} at equal verify token budget")
+    return results
 
 
 if __name__ == "__main__":

@@ -16,12 +16,16 @@ instead of single-token steps (self-speculative decoding, DESIGN.md §4):
 a fused K-step greedy draft call with the aggressively-compressed draft
 parameter set, then one multi-token verify call that emits 1..K+1 tokens
 per slot. Budgets are clamped on device, so segments stay sync-free.
+``spec_fanout`` upgrades the round to a token TREE (DESIGN.md §8):
+top-k branches per draft depth, one T = N+1 tree-attention verify, and
+an accepted-path KV compaction — optionally retuned online per segment
+from the observed acceptance rate (``spec_adaptive``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +55,15 @@ class EngineConfig:
     # must match core.model_compress.draft_layers of the profile used).
     spec_k: int = 0
     spec_draft_layers: Optional[int] = None
+    # token-TREE drafting (engine/spec/tree.py, DESIGN.md §8): fanout per
+    # draft depth, e.g. (4, 2, 2) = 28 nodes / 16 leaves / depth 3 — the
+    # round's verify block is all N+1 tree slots and 1..depth+1 tokens
+    # emerge per slot. Overrides spec_k (which stays the CHAIN path).
+    spec_fanout: Optional[Tuple[int, ...]] = None
+    # retune the tree online from a per-slot EWMA of the observed
+    # acceptance rate: thrash shrinks to a chain K=1, sustained
+    # acceptance widens back to the full spec_fanout profile
+    spec_adaptive: bool = False
 
 
 def _bucket(n: int, lo: int) -> int:
@@ -91,6 +104,15 @@ def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
 
 
 class InferenceEngine:
+    # adaptive tree control (spec_adaptive): per-slot EWMA of the round
+    # acceptance fraction; below LOW the segment falls back to a chain
+    # K=1, at/above HIGH it runs the full spec_fanout profile, between
+    # them a depth-equal chain (cheap drafts, no width)
+    SPEC_EWMA_INIT = 0.5
+    SPEC_EWMA_BETA = 0.7
+    SPEC_EWMA_LOW = 0.35
+    SPEC_EWMA_HIGH = 0.65
+
     def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
                  sampling: SamplingParams = SamplingParams(),
                  draft_params=None):
@@ -98,21 +120,42 @@ class InferenceEngine:
         if api.prefill is None or api.init_paged_cache is None:
             raise NotImplementedError(
                 f"family {cfg.family!r} lacks prefill/paged-cache support")
-        if engine_cfg.spec_k > 0 and draft_params is None:
-            raise ValueError("spec_k > 0 requires draft_params (compress "
-                             "the same checkpoint with a draft profile: "
-                             "core.model_compress.compress_draft)")
+        self._spec_tree = engine_cfg.spec_fanout is not None
+        spec = engine_cfg.spec_k > 0 or self._spec_tree
+        if spec and draft_params is None:
+            raise ValueError("speculative decoding requires draft_params "
+                             "(compress the same checkpoint with a draft "
+                             "profile: core.model_compress.compress_draft)")
         self.cfg = cfg
         self.params = params
         self.draft_params = draft_params
         self.ecfg = engine_cfg
         self.sampling = sampling
         self.api = api
-        self.spec = engine_cfg.spec_k > 0
+        self.spec = spec
+        if self._spec_tree:
+            from repro.engine.spec import TreeTemplate
+            fan = tuple(int(f) for f in engine_cfg.spec_fanout)
+            full = TreeTemplate(fan)
+            # adaptive ladder: chain K=1 <- depth-equal chain <- full
+            # tree. Rungs may coincide (e.g. a depth-1 fanout's mid rung
+            # IS the low one) — kept positional, not deduped, so the
+            # LOW/HIGH thresholds always map to the right rung; the
+            # jitted step triple is lru-memoized per fanout, so
+            # duplicate rungs never recompile.
+            self._fanout_ladder = [(1,), (1,) * full.depth, fan] \
+                if engine_cfg.spec_adaptive else [fan]
+            lookahead = full.n_nodes       # verify writes all N tree slots
+            self._spec_width = full.depth + 1
+        else:
+            lookahead = engine_cfg.spec_k
+            self._spec_width = engine_cfg.spec_k + 1
+        self._accept_ewma = np.full((engine_cfg.num_slots,),
+                                    self.SPEC_EWMA_INIT)
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
                                engine_cfg.num_pages,
-                               lookahead=engine_cfg.spec_k)
+                               lookahead=lookahead)
         self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
                                    engine_cfg.max_seq)
         self.metrics = EngineMetrics()
@@ -125,11 +168,11 @@ class InferenceEngine:
         self._block_tables = self.kv.device_block_tables()
         self._max_live = self.kv.max_pages_per_slot    # static, pow2-bucketed
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
-        # spec mode log: (tokens [B, K+1], counts [B]) per prefill/round
+        # spec mode log: (tokens [B, W], counts [B]) per prefill/round
         self._spec_log: List = []
         self._prefill_fn, self._decode_fn = _step_fns(
             cfg, sampling, engine_cfg.use_pallas)
-        if self.spec:
+        if self.spec and not self._spec_tree:
             from repro.engine.spec import spec_step_fns
             self._draft_fn, self._verify_fn = spec_step_fns(
                 cfg, sampling, engine_cfg.use_pallas, engine_cfg.spec_k,
@@ -168,6 +211,8 @@ class InferenceEngine:
             for r in finished:
                 self.metrics.record_finish(r.rid, t, r.produced)
                 sch.finish(r)
+                # an evicted slot's acceptance history dies with it
+                self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
             if finished:
                 self._sync_slot_state()
         self.metrics.run_finished()
@@ -198,23 +243,39 @@ class InferenceEngine:
         return finished
 
     def _spec_segment(self, actives: List[Request]) -> List[Request]:
-        """Speculative segment: interleave fused K-token draft calls with
-        one multi-token verify call per round. Every round emits 1..K+1
-        tokens per active slot (device-clamped to the slot's budget), so
+        """Speculative segment: interleave fused draft calls with one
+        multi-token verify call per round. Every round emits 1..K+1
+        tokens per active slot (K = chain length or tree depth,
+        device-clamped to the slot's budget), so
         ceil(min_remaining / (K+1)) rounds can never overshoot the
         earliest budget — the host syncs once at the boundary, exactly
-        like the plain segment loop."""
+        like the plain segment loop. Tree mode additionally picks the
+        segment's fanout profile from the adaptive ladder (the jitted
+        step pairs are memoized per fanout, so profile flips never
+        recompile)."""
         sch = self.scheduler
-        k = self.ecfg.spec_k
         t0 = self.metrics.now()
+        if self._spec_tree:
+            from repro.engine.spec import tree_step_fns
+            fanout = self._segment_fanout()
+            draft_fn, verify_fn, tpl = tree_step_fns(
+                self.cfg, self.sampling, self.ecfg.use_pallas, fanout,
+                self.ecfg.spec_draft_layers)
+            k, width = tpl.depth, tpl.n_nodes + 1
+            draft_dispatches = tpl.depth          # root + frontier calls
+        else:
+            draft_fn, verify_fn = self._draft_fn, self._verify_fn
+            k = self.ecfg.spec_k
+            width = k + 1
+            draft_dispatches = 1                  # one fused K-step call
         rounds = max(1, -(-min(r.remaining for r in actives) // (k + 1)))
         round_idxs: List[int] = []
         for _ in range(rounds):
-            draft = self._draft_fn(
+            draft = draft_fn(
                 self.draft_params, self.kv.data, self._tokens,
                 self._positions, self._block_tables, self._max_live)
             (out, n_new, self._tokens, self._positions, self._remaining,
-             self.kv.data, self._rng) = self._verify_fn(
+             self.kv.data, self._rng) = verify_fn(
                 self.params, self.kv.data, self._tokens, draft,
                 self._positions, self._block_tables, self._active,
                 self._remaining, self._rng, self._max_live)
@@ -227,14 +288,48 @@ class InferenceEngine:
         for idx in round_idxs:                         # replay the rounds
             n_new_h = np.asarray(self._spec_log[idx][1])
             proposed, accepted = sch.step_spec_round(n_new_h, k)
-            self.metrics.record_spec_round(proposed, accepted)
+            slot_rounds = int((n_new_h > 0).sum())
+            self.metrics.record_spec_round(
+                proposed, accepted, slot_rounds=slot_rounds,
+                verify_tokens=width * slot_rounds)
+            if self.ecfg.spec_adaptive:
+                self._update_accept_ewma(n_new_h, k)
             seg_tokens += int(n_new_h.sum())
         # draft dispatches + verify dispatches (for dispatch accounting;
         # spec_rounds tracks rounds)
-        self.metrics.decode_steps += 2 * rounds
+        self.metrics.decode_steps += (draft_dispatches + 1) * rounds
         self.metrics.record_decode_segment(self.metrics.now() - t0,
                                            seg_tokens)
         return sch.collect_finished()
+
+    def _segment_fanout(self) -> Tuple[int, ...]:
+        """Adaptive tree budget: the MIN of the active slots' acceptance
+        EWMAs picks the ladder rung (conservative — thrash anywhere
+        shrinks the whole batch's tree; the tree shape is one static
+        jitted program per segment, so per-slot budgets resolve at
+        segment granularity)."""
+        if len(self._fanout_ladder) == 1:
+            return self._fanout_ladder[0]
+        act = [i for i, s in enumerate(self.scheduler.slots)
+               if s.request is not None and s.request.state == DECODE]
+        a = min(self._accept_ewma[i] for i in act) if act else 1.0
+        if a < self.SPEC_EWMA_LOW:
+            return self._fanout_ladder[0]
+        if a >= self.SPEC_EWMA_HIGH:
+            return self._fanout_ladder[2]
+        return self._fanout_ladder[1]
+
+    def _update_accept_ewma(self, n_new: np.ndarray, k: int) -> None:
+        """Fold one round's per-slot acceptance fraction ((n_new - 1)/K,
+        the budget-clamp tail reads as rejection — acceptable noise for a
+        control signal) into the per-slot EWMAs."""
+        for i in range(self.ecfg.num_slots):
+            if n_new[i] > 0:
+                rate = min(max((float(n_new[i]) - 1.0) / max(k, 1), 0.0),
+                           1.0)
+                self._accept_ewma[i] = (self.SPEC_EWMA_BETA
+                                        * self._accept_ewma[i]
+                                        + (1 - self.SPEC_EWMA_BETA) * rate)
 
     # -- internals ----------------------------------------------------------
 
@@ -286,8 +381,9 @@ class InferenceEngine:
 
     def _log_spec(self, toks: jnp.ndarray, counts: jnp.ndarray) -> int:
         """Append a (tokens [B, W], counts [B]) pair to the spec log,
-        width-padded to K+1 so materialization is one stack per array."""
-        w = self.ecfg.spec_k + 1
+        width-padded to the max round width (chain K+1 / tree depth+1)
+        so materialization is one stack per array."""
+        w = self._spec_width
         if toks.shape[1] < w:
             toks = jnp.pad(toks, ((0, 0), (0, w - toks.shape[1])))
         self._spec_log.append((toks, counts))

@@ -59,13 +59,16 @@ class PagedKVCache:
                 f"model family {cfg.family!r} has no paged-cache support")
         self.page_size = page_size
         # ``lookahead``: extra writable positions past a slot's budget for
-        # speculative decoding — the verify step scatters K+1 tokens at
-        # positions pos..pos+K before acceptance is known, so a slot's
-        # reservation must cover its worst case plus K tentative tokens.
-        # A rejected suffix is rolled back by *position rewind only*
-        # (engine rewinds its write position; the block table and the
-        # slot's page set never change mid-request), so accept/reject
-        # churn can never leak or thrash pages.
+        # speculative decoding — the verify step scatters its whole fed
+        # block (K+1 chain tokens, or all N+1 slots of a token TREE) at
+        # positions pos..pos+lookahead before acceptance is known, so a
+        # slot's reservation must cover its worst case plus that many
+        # tentative tokens. A rejected suffix/branch is rolled back by
+        # *position rewind only* (engine rewinds its write position — a
+        # tree additionally compacts the accepted path's K/V slots first;
+        # the block table and the slot's page set never change
+        # mid-request), so accept/reject churn can never leak or thrash
+        # pages.
         self.lookahead = lookahead
         self.max_pages_per_slot = -(-(max_seq + lookahead) // page_size)
         # default pool: every slot can grow to max_seq simultaneously

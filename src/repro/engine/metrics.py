@@ -46,10 +46,15 @@ class EngineMetrics:
         self.start_t: Optional[float] = None
         self.end_t: Optional[float] = None
         self.decode_steps = 0
-        # speculative decoding: rounds dispatched, drafts proposed/accepted
+        # speculative decoding: rounds dispatched, drafts proposed/accepted,
+        # per-slot verify dispatches and their total fed-token budget (the
+        # tree/chain comparison currency: accepted length PER verify
+        # dispatch at equal verify token budget, DESIGN.md §8)
         self.spec_rounds = 0
         self.draft_proposed = 0
         self.draft_accepted = 0
+        self.spec_slot_rounds = 0
+        self.spec_verify_tokens = 0
         # decode-phase wall time + tokens -> mean inter-token latency (the
         # burst-aware latency speculative decoding actually changes: TPOT
         # per request divides by tokens that may arrive K+1 at a time)
@@ -60,10 +65,14 @@ class EngineMetrics:
         self.decode_time_s += seconds
         self.decode_tokens += tokens
 
-    def record_spec_round(self, proposed: int, accepted: int) -> None:
+    def record_spec_round(self, proposed: int, accepted: int,
+                          slot_rounds: int = 0,
+                          verify_tokens: int = 0) -> None:
         self.spec_rounds += 1
         self.draft_proposed += proposed
         self.draft_accepted += accepted
+        self.spec_slot_rounds += slot_rounds
+        self.spec_verify_tokens += verify_tokens
 
     def now(self) -> float:
         return time.perf_counter()
@@ -115,6 +124,13 @@ class EngineMetrics:
             "draft_accepted": self.draft_accepted,
             "acceptance_rate": (self.draft_accepted / self.draft_proposed
                                 if self.draft_proposed else float("nan")),
+            # mean accepted DRAFTS per per-slot verify dispatch (the
+            # emitted correction/bonus token is on top of this)
+            "accepted_len_mean": (self.draft_accepted
+                                  / self.spec_slot_rounds
+                                  if self.spec_slot_rounds
+                                  else float("nan")),
+            "verify_tokens": self.spec_verify_tokens,
         }
 
     def format_summary(self) -> str:
@@ -129,5 +145,6 @@ class EngineMetrics:
         if self.spec_rounds:
             line += (f" | spec: {s['spec_rounds']} rounds, "
                      f"acceptance {s['acceptance_rate']:.0%}, "
+                     f"accepted/verify {s['accepted_len_mean']:.2f}, "
                      f"ITL {s['itl_ms_mean']:.2f}ms")
         return line

@@ -1,10 +1,13 @@
 """Token sampling: greedy / temperature / top-k / top-p (nucleus), and
-the speculative-decoding verify (:func:`spec_verify` — lossless
-rejection sampling of draft tokens against the target distribution).
+the speculative-decoding verifies (:func:`spec_verify` — lossless
+rejection sampling of a draft CHAIN against the target distribution;
+:func:`tree_verify` — its token-TREE generalization with recursive
+rejection-resampling over each node's sibling set, DESIGN.md §8).
 
-``sample`` and ``spec_verify`` are pure and shape-stable, so they live
-INSIDE the jitted prefill/decode/verify steps — sampled tokens never
-round-trip to the host (device-side token feedback, DESIGN.md §3.4).
+``sample``, ``spec_verify`` and ``tree_verify`` are pure and
+shape-stable, so they live INSIDE the jitted prefill/decode/verify
+steps — sampled tokens never round-trip to the host (device-side token
+feedback, DESIGN.md §3.4).
 """
 from __future__ import annotations
 
@@ -114,3 +117,106 @@ def spec_verify(logits: jnp.ndarray, draft: jnp.ndarray, rng: jnp.ndarray,
         [draft, jnp.zeros((b, 1), jnp.int32)], axis=1)
     out = jnp.where(idx < n_acc[:, None], draft_pad, resample)
     return n_acc.astype(jnp.int32), out
+
+
+def tree_verify(logits: jnp.ndarray, feed: jnp.ndarray, fanout, child_start,
+                rng: jnp.ndarray, sp: SamplingParams):
+    """Token-TREE speculative verification (DESIGN.md §8): walk the draft
+    tree root-to-leaf, at each node rejection-sampling over its SIBLING
+    SET, and emit the longest target-accepted path plus one
+    correction/bonus token — lossless for any target temperature.
+
+    logits: [B, N+1, V] target logits at the N+1 fed tree slots (slot i's
+    logits are the target distribution AFTER the root-to-i path); feed:
+    [B, N+1] the fed tokens (slot 0 = the pending token, slots 1..N the
+    BFS tree); ``fanout`` (static tuple) and ``child_start`` (static
+    [N+1] first-child flat index, -1 at leaves) describe the tree shape.
+    Returns ``(n_acc [B], out [B, D+1], path [B, D])`` with D =
+    len(fanout): ``out[:, :n_acc]`` are the accepted path tokens,
+    ``out[:, n_acc]`` the correction/bonus (a round always yields
+    ``n_acc + 1`` tokens; later entries are unspecified), ``path[:, i]``
+    the flat tree slot of the i-th accepted token (for the engine's KV
+    compaction; entries at/after ``n_acc`` are unspecified).
+
+    Losslessness: at every node the candidates are the node's distinct
+    children (greedy top-k drafts). Candidate j is accepted with
+    probability ``r(d_j) / sum(r)`` where r is the target with all
+    previously rejected siblings' mass zeroed — exactly chained
+    point-mass rejection sampling, so each emitted token is distributed
+    as the target regardless of the draft; if every sibling is rejected
+    the correction is drawn from the final residual. At temperature 0
+    this degenerates to "step to the child that IS the target argmax,
+    else emit the argmax" — token-for-token sequential greedy. A chain
+    (fanout all 1) reproduces :func:`spec_verify` exactly.
+    """
+    b, n1, v = logits.shape
+    depth = len(fanout)
+    cs = jnp.asarray(child_start, jnp.int32)                # [N+1]
+    cur = jnp.zeros((b,), jnp.int32)                        # current node
+    alive = jnp.ones((b,), jnp.bool_)
+    n_acc = jnp.zeros((b,), jnp.int32)
+    out = jnp.zeros((b, depth + 1), jnp.int32)
+    path = jnp.zeros((b, depth), jnp.int32)
+
+    def at(arr2d, idx):
+        return jnp.take_along_axis(arr2d, idx[:, None], axis=1)[:, 0]
+
+    if sp.greedy:
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, N+1]
+        for i, f in enumerate(fanout):
+            cb = jnp.take(cs, cur)                           # [B]
+            t_cur = at(tgt, cur)
+            cand = jnp.stack([at(feed, cb + j) for j in range(f)], 1)
+            match = cand == t_cur[:, None]
+            hit = jnp.any(match, axis=1)
+            jidx = jnp.argmax(match, axis=1).astype(jnp.int32)
+            step = alive & hit
+            # accepted child token == target argmax == the correction on
+            # a miss, so alive rows emit t_cur either way
+            out = out.at[:, i].set(jnp.where(alive, t_cur, out[:, i]))
+            path = path.at[:, i].set(jnp.where(step, cb + jidx, 0))
+            n_acc = n_acc + step.astype(jnp.int32)
+            cur = jnp.where(step, cb + jidx, cur)
+            alive = step
+        out = out.at[:, depth].set(
+            jnp.where(alive, at(tgt, cur), out[:, depth]))
+        return n_acc, out, path
+
+    probs = jax.nn.softmax(filter_logits(logits, sp), axis=-1)  # [B,N+1,V]
+    iota_v = jnp.arange(v, dtype=jnp.int32)[None, :]
+    for i, f in enumerate(fanout):
+        p = jnp.take_along_axis(probs, cur[:, None, None], axis=1)[:, 0]
+        r = p                                                # residual
+        acc = jnp.full((b,), -1, jnp.int32)
+        cb = jnp.take(cs, cur)
+        cand = []
+        for j in range(f):
+            tok_j = at(feed, cb + j)
+            cand.append(tok_j)
+            rs = jnp.maximum(jnp.sum(r, axis=-1), 1e-30)
+            pj = jnp.take_along_axis(r, tok_j[:, None], axis=1)[:, 0] / rs
+            rng, sub = jax.random.split(rng)
+            u = jax.random.uniform(sub, (b,))
+            acc = jnp.where((acc < 0) & (u < pj), j, acc)
+            # rows still rejecting zero this sibling's mass (point-mass
+            # residual: norm(max(p - q, 0)) = p with the token removed)
+            r = jnp.where((acc < 0)[:, None] & (iota_v == tok_j[:, None]),
+                          0.0, r)
+        rng, sub = jax.random.split(rng)
+        corr = jax.random.categorical(
+            sub, jnp.log(jnp.maximum(r, 1e-30)), axis=-1).astype(jnp.int32)
+        step = alive & (acc >= 0)
+        jidx = jnp.maximum(acc, 0)
+        tok_acc = at(jnp.stack(cand, 1), jidx)
+        out = out.at[:, i].set(
+            jnp.where(alive, jnp.where(step, tok_acc, corr), out[:, i]))
+        path = path.at[:, i].set(jnp.where(step, cb + jidx, 0))
+        n_acc = n_acc + step.astype(jnp.int32)
+        cur = jnp.where(step, cb + jidx, cur)
+        alive = step
+    p_fin = jnp.take_along_axis(probs, cur[:, None, None], axis=1)[:, 0]
+    rng, sub = jax.random.split(rng)
+    bonus = jax.random.categorical(
+        sub, jnp.log(jnp.maximum(p_fin, 1e-30)), axis=-1).astype(jnp.int32)
+    out = out.at[:, depth].set(jnp.where(alive, bonus, out[:, depth]))
+    return n_acc, out, path

@@ -145,6 +145,9 @@ class Scheduler:
         """Account one speculative draft/verify round: slot ``i`` produced
         ``n_new[i]`` tokens (0 for free / budget-exhausted slots — the
         device clamps to the draft budget, so overshoot is impossible).
+        ``k`` is the round's max accepted DRAFTS per slot: the chain
+        length, or the tree depth (a token tree proposes one root-to-leaf
+        path's worth of acceptable drafts however wide it fans out).
         A request with ``remaining`` budget can usefully accept at most
         ``remaining - 1`` drafts, so proposals are clamped to that when
         counting acceptance (a budget cut-off is not a rejection).

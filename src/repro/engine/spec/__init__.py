@@ -14,8 +14,19 @@ output is token-for-token identical to greedy non-speculative output
     eng = InferenceEngine(cfg, target_params,
                           EngineConfig(num_slots=4, spec_k=4),
                           draft_params=draft)
+
+Token-TREE drafting (``EngineConfig.spec_fanout``, engine/spec/tree.py,
+DESIGN.md §8) spends the same verify budget on top-k branches per draft
+step — higher expected accepted length per verify dispatch whenever the
+drafter's top-1 is unsure; ``spec_adaptive`` retunes the tree online
+from the observed acceptance rate.
 """
 from repro.engine.spec.drafter import build_draft_fn, spec_step_fns
+from repro.engine.spec.tree import (TreeTemplate, build_tree_draft_fn,
+                                    build_tree_verify_fn, compact_accepted,
+                                    tree_step_fns)
 from repro.engine.spec.verify import build_verify_fn
 
-__all__ = ["build_draft_fn", "build_verify_fn", "spec_step_fns"]
+__all__ = ["build_draft_fn", "build_verify_fn", "spec_step_fns",
+           "TreeTemplate", "build_tree_draft_fn", "build_tree_verify_fn",
+           "compact_accepted", "tree_step_fns"]

@@ -17,6 +17,10 @@ contents are stale either way until the verify scatter).
 All K steps run inside ONE jitted call (the loop is unrolled at trace
 time — K is small and static), so a draft round costs a single dispatch
 regardless of K; the greedy argmax feedback never leaves the device.
+
+This is the CHAIN drafter (one token per step). The token-TREE drafter
+(``engine/spec/tree.py``, DESIGN.md §8) generalizes it to top-k branches
+per step and is bit-identical to this path at fanout 1.
 """
 from __future__ import annotations
 

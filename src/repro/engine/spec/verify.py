@@ -11,6 +11,12 @@ Rollback of a rejected suffix is purely positional: the new position is
 ``pos + n_new`` and the stale K/V beyond it is never read (the per-query
 length masks it) and is overwritten by the next round — no page
 alloc/free ever happens mid-request (DESIGN.md §4).
+
+This is the CHAIN verify (one draft per position, staircase mask). The
+token-TREE verify (``engine/spec/tree.py:build_tree_verify_fn``,
+DESIGN.md §8) feeds a whole BFS tree block under an ancestor-bitmap
+mask and adds an accepted-path KV compaction before the position
+advance; at fanout 1 it reproduces this path bit for bit.
 """
 from __future__ import annotations
 

@@ -155,6 +155,7 @@ def dense_bytes_model(n: int, k: int, batch: int = 1,
 
 def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
                            k_scale_pages=None, v_scale_pages=None, *,
+                           anc=None, anc_base=None, anc_window: int = 0,
                            use_pallas: bool = True,
                            interpret: Optional[bool] = None):
     """Fused decode attention directly on the paged KV pool.
@@ -165,14 +166,22 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
     prefix (the multi-token staircase); block_tables: [B, MP] page ids,
     entries >= P are out-of-range sentinels. Returns [B, T, H, D] f32.
 
+    ``anc`` [B, T] / ``anc_base`` [B] / ``anc_window`` switch the fed
+    block to token-TREE semantics (`models/layers.py:ancestor_mask`):
+    query t additionally needs bit ``s - anc_base[b]`` of ``anc[b, t]``
+    for cache positions inside the fed window.
+
     The Pallas path streams only each slot's live pages through VMEM —
     O(live tokens) HBM traffic; the jnp path is the dense-gather
-    reference (`kernels/ref.py:paged_attention_ref`, identical math).
+    reference (`kernels/ref.py:paged_attention_ref` /
+    `tree_attention_ref`, identical math).
     """
     if not use_pallas:
         return kref.paged_attention_ref(q, k_pages, v_pages, lengths,
                                         block_tables, k_scale_pages,
-                                        v_scale_pages)
+                                        v_scale_pages, anc=anc,
+                                        anc_base=anc_base,
+                                        anc_window=anc_window)
     if interpret is None:
         interpret = not _on_tpu()
     from repro.kernels.paged_attention import paged_attention_pallas
@@ -190,7 +199,8 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
         (jnp.max(lq, axis=1) + page_size - 1) // page_size, 0, mp)
     o = paged_attention_pallas(qh, k_pages, v_pages, lq, block_tables,
                                live, k_scale_pages, v_scale_pages,
-                               t=t, interpret=interpret)
+                               t=t, anc=anc, anc_base=anc_base,
+                               anc_window=anc_window, interpret=interpret)
     return o.reshape(b, khn, t, r, d).transpose(0, 2, 1, 3, 4) \
             .reshape(b, t, h, d)
 

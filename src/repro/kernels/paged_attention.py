@@ -50,14 +50,22 @@ T > 1 covers the speculative-decoding verify step (T = K+1 per-slot
 short-prefill): causality inside the block comes from the per-query
 staircase ``lengths``, identical to the jnp reference's masking.
 
+Token-TREE verification (DESIGN.md §8) adds an optional ancestor-bitmap
+operand: the fed block is a flat BFS token tree written at cache
+positions ``base .. base + window - 1``, and query t additionally
+requires bit ``s - base`` of ``anc[b, t]`` for cache positions inside
+that window — siblings/uncles in the block stay invisible. ``base`` [B]
+rides the scalar-prefetch path next to the block tables; ``anc`` [B, T]
+is a VMEM row operand like ``lengths``. With ``anc`` absent the compiled
+kernel is UNCHANGED (the staircase is the chain special case —
+`models/layers.py:ancestor_mask` is the shared mask definition).
+
 Rows (T*R) and D are used as-is — adequate for interpret mode (the
 repo's off-TPU convention) and for MXU-friendly head dims; a deployment
 at exotic head dims should pad rows to the sublane multiple in
 ``ops.paged_decode_attention``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +78,8 @@ def _kernel(bt_ref, live_ref,                       # scalar prefetch
             o_ref,                                  # VMEM out
             m_ref, l_ref, acc_ref,                  # scratch
             *, page_size: int, t: int, r: int,
-            ks_ref=None, vs_ref=None):
+            ks_ref=None, vs_ref=None,
+            anc_ref=None, base_ref=None, window: int = 0):
     bi = pl.program_id(0)
     pi = pl.program_id(2)
     npg = pl.num_programs(2)
@@ -104,6 +113,13 @@ def _kernel(bt_ref, live_ref,                       # scalar prefetch
             jnp.int32, (t, page_size), 1)
         lq = len_ref[0]                              # [T]
         valid = pos < lq[:, None]                    # [T, ps]
+        if anc_ref is not None:
+            # token-tree window: positions base..base+window-1 hold the
+            # fed BFS block; query t sees only its ancestor bits there
+            fed = pos - base_ref[bi]                 # [T, ps]
+            in_win = (fed >= 0) & (fed < window)
+            bits = (anc_ref[0][:, None] >> jnp.clip(fed, 0, 31)) & 1
+            valid &= jnp.logical_not(in_win) | (bits == 1)
         valid = jnp.broadcast_to(valid[:, None, :],
                                  (t, r, page_size)).reshape(t * r, page_size)
         sco = jnp.where(valid, sco, -jnp.inf)
@@ -145,6 +161,9 @@ def paged_attention_pallas(
     v_scale_pages=None,
     *,
     t: int,
+    anc=None,                  # [B, T] int32 ancestor bitmaps (tree verify)
+    anc_base=None,             # [B] int32 cache position of the tree root
+    anc_window: int = 0,       # fed-block width (bits used in anc)
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns [B, KH, T*R, D] f32. See module docstring for semantics."""
@@ -153,46 +172,71 @@ def paged_attention_pallas(
     num_pages, page_size = k_pages.shape[0], k_pages.shape[1]
     mp = block_tables.shape[1]
     int8 = k_scale_pages is not None
+    tree = anc is not None
     grid = (b, khn, mp)
 
-    def page_map(bi, ki, pi, bt, live):
+    # index maps take the scalar-prefetch operands after the grid ids; the
+    # tree variant prefetches a third array (the per-slot window base), so
+    # trailing prefetch args are absorbed generically
+    def page_map(bi, ki, pi, bt, live, *_):
         # steps past the live prefix re-map to the last live page so the
         # block index is unchanged and Pallas elides the DMA; sentinel
         # entries clamp to P - 1 (== XLA's OOB-gather clip)
         pe = jnp.minimum(pi, jnp.maximum(live[bi] - 1, 0))
         return (jnp.minimum(bt[bi, pe], num_pages - 1), 0, ki, 0)
 
-    def scale_map(bi, ki, pi, bt, live):
+    def scale_map(bi, ki, pi, bt, live, *_):
         pe = jnp.minimum(pi, jnp.maximum(live[bi] - 1, 0))
         return (jnp.minimum(bt[bi, pe], num_pages - 1), 0, ki)
 
-    in_specs = [
-        pl.BlockSpec((1, t), lambda bi, ki, pi, bt, live: (bi, 0)),
-        pl.BlockSpec((1, 1, tr, d), lambda bi, ki, pi, bt, live:
-                     (bi, ki, 0, 0)),
-        pl.BlockSpec((1, page_size, 1, d), page_map),
-        pl.BlockSpec((1, page_size, 1, d), page_map),
-    ]
-    args = [lengths.astype(jnp.int32), q, k_pages, v_pages]
-    kern = functools.partial(_kernel, page_size=page_size, t=t, r=r)
+    def row_map(bi, ki, pi, *_):
+        return (bi, ki, 0, 0)
+
+    def len_map(bi, ki, pi, *_):
+        return (bi, 0)
+
+    prefetch = [block_tables.astype(jnp.int32),
+                live_pages.astype(jnp.int32)]
+    if tree:
+        prefetch.append(anc_base.astype(jnp.int32))
+    in_specs = [pl.BlockSpec((1, t), len_map)]
+    args = [lengths.astype(jnp.int32)]
+    if tree:
+        in_specs.append(pl.BlockSpec((1, t), len_map))
+        args.append(anc.astype(jnp.int32))
+    in_specs += [pl.BlockSpec((1, 1, tr, d), row_map),
+                 pl.BlockSpec((1, page_size, 1, d), page_map),
+                 pl.BlockSpec((1, page_size, 1, d), page_map)]
+    args += [q, k_pages, v_pages]
     if int8:
         in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
                      pl.BlockSpec((1, page_size, 1), scale_map)]
         args += [k_scale_pages, v_scale_pages]
 
-        def kern(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref,
-                 ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref):
-            return _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref,
-                           o_ref, m_ref, l_ref, acc_ref,
-                           page_size=page_size, t=t, r=r,
-                           ks_ref=ks_ref, vs_ref=vs_ref)
+    def kern(*refs):
+        i = 2 + tree                     # bt, live[, base]
+        base_ref = refs[2] if tree else None
+        len_ref = refs[i]; i += 1
+        anc_ref = None
+        if tree:
+            anc_ref = refs[i]; i += 1
+        q_ref, k_ref, v_ref = refs[i:i + 3]; i += 3
+        ks_ref = vs_ref = None
+        if int8:
+            ks_ref, vs_ref = refs[i:i + 2]; i += 2
+        o_ref, m_ref, l_ref, acc_ref = refs[i:i + 4]
+        return _kernel(refs[0], refs[1], len_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref,
+                       page_size=page_size, t=t, r=r,
+                       ks_ref=ks_ref, vs_ref=vs_ref,
+                       anc_ref=anc_ref, base_ref=base_ref,
+                       window=anc_window)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, tr, d),
-                               lambda bi, ki, pi, bt, live: (bi, ki, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, tr, d), row_map),
         scratch_shapes=[
             pltpu.VMEM((tr, 128), jnp.float32),   # running max (lane-padded)
             pltpu.VMEM((tr, 128), jnp.float32),   # running denom
@@ -204,4 +248,4 @@ def paged_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, khn, tr, d), jnp.float32),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), live_pages.astype(jnp.int32), *args)
+    )(*prefetch, *args)

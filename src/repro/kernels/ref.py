@@ -80,7 +80,8 @@ def kv_decode_attention_ref(q, k_cache, k_scale, v_cache, v_scale, length,
 
 def paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
                         k_scale_pages=None, v_scale_pages=None,
-                        dtype=jnp.float32):
+                        dtype=jnp.float32, *, anc=None, anc_base=None,
+                        anc_window: int = 0):
     """Oracle + GSPMD/dry-run path for the paged decode attention kernel.
 
     Dense page gather (what the kernel avoids) followed by staircase
@@ -92,10 +93,13 @@ def paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
     lengths: [] / [B] / [B, T] per-query valid prefix; block_tables:
     [B, MP] page ids — entries >= P are sentinels and clamp to P - 1
     (XLA's OOB-gather clip), their positions masked by ``lengths``.
+    ``anc``/``anc_base``/``anc_window``: optional token-tree ancestor
+    bitmaps (`models/layers.py:ancestor_mask`; see
+    :func:`tree_attention_ref`).
     Rows whose length is 0 softmax over an empty set and return NaN
     (the kernel returns 0 there); callers mask such rows either way.
     """
-    from repro.models.layers import staircase_mask
+    from repro.models.layers import ancestor_mask
     b, t, h, d = q.shape
     num_pages, ps, khn, _ = k_pages.shape
     r = h // khn
@@ -113,8 +117,27 @@ def paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
     scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
     qh = q.reshape(b, t, khn, r, d).astype(jnp.float32)
     sco = jnp.einsum("btkrd,bskd->bkrts", qh, k) * scale
-    valid = staircase_mask(lengths, b, t, s)               # [B, T, S]
+    valid = ancestor_mask(lengths, anc, anc_base, anc_window,
+                          b, t, s)                         # [B, T, S]
     sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
     p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     o = jnp.einsum("bkrts,bskd->btkrd", p, v)
     return o.reshape(b, t, h, d).astype(dtype)
+
+
+def tree_attention_ref(q, k_pages, v_pages, lengths, block_tables,
+                       anc, anc_base, anc_window: int,
+                       k_scale_pages=None, v_scale_pages=None,
+                       dtype=jnp.float32):
+    """Oracle for token-TREE paged attention (DESIGN.md §8).
+
+    The T fed queries are a flat BFS token tree written at cache
+    positions ``anc_base .. anc_base + anc_window - 1``; ``anc`` [B, T]
+    carries each query's root-to-self path as a bitmap over that window
+    (bit i = BFS slot i visible). Everything else is
+    :func:`paged_attention_ref` — the staircase is the degenerate chain
+    (every bitmap a prefix of ones)."""
+    return paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
+                               k_scale_pages, v_scale_pages, dtype,
+                               anc=anc, anc_base=anc_base,
+                               anc_window=anc_window)

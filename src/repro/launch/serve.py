@@ -74,6 +74,16 @@ def main(argv=None):
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="speculative decoding: draft K tokens per round "
                          "(0 = off); lossless — output matches non-spec")
+    ap.add_argument("--spec-tree", default=None, metavar="F1,F2,..",
+                    help="token-TREE drafting: top-k fanout per draft "
+                         "depth (e.g. 4,2,2 = 28 nodes / depth 3); one "
+                         "tree-attention verify call per round; implies "
+                         "--spec; lossless like the chain")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="retune the tree online from the observed "
+                         "acceptance rate (per-slot EWMA: thrash shrinks "
+                         "to a chain K=1, sustained acceptance widens "
+                         "back to the full --spec-tree profile)")
     ap.add_argument("--draft-profile", default="w4s75",
                     choices=list_draft_profiles(),
                     help="draft compression of the same checkpoint")
@@ -85,16 +95,26 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    spec_fanout = None
+    if args.spec_tree:
+        try:
+            spec_fanout = tuple(int(f) for f in args.spec_tree.split(","))
+        except ValueError:
+            ap.error(f"--spec-tree wants a comma list of fanouts, "
+                     f"got {args.spec_tree!r}")
+    spec_on = args.spec > 0 or spec_fanout is not None
+    if args.spec_adaptive and spec_fanout is None:
+        ap.error("--spec-adaptive requires --spec-tree")
+
     cfg = get_config(args.arch, reduced=args.reduced)
     rng = jax.random.PRNGKey(args.seed)
     # the FP tree is only needed as the shared source of target + draft
     # compression; don't keep a full-scale checkpoint alive otherwise
-    fp_params = get_model(cfg).init_params(rng, cfg) if args.spec > 0 \
-        else None
+    fp_params = get_model(cfg).init_params(rng, cfg) if spec_on else None
     params = compressed_params(cfg, args, rng, fp_params=fp_params)
     draft_params = None
     dlayers = None
-    if args.spec > 0:
+    if spec_on:
         t0 = time.time()
         draft_params = compress_draft(fp_params, cfg,
                                       profile=args.draft_profile,
@@ -102,6 +122,9 @@ def main(argv=None):
         dlayers = draft_layers(cfg, args.draft_profile)
         print(f"packed draft profile {args.draft_profile} "
               f"({dlayers}/{cfg.n_layers} layers) in {time.time()-t0:.1f}s")
+        if spec_fanout is not None:
+            print(f"token-tree drafting: fanout {spec_fanout}"
+                  + (" (adaptive)" if args.spec_adaptive else ""))
         fp_params = None                 # free the FP tree before serving
 
     engine = InferenceEngine(
@@ -109,7 +132,9 @@ def main(argv=None):
         EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
                      page_size=args.page_size, num_pages=args.num_pages,
                      use_pallas=args.use_pallas, seed=args.seed,
-                     spec_k=args.spec, spec_draft_layers=dlayers),
+                     spec_k=args.spec, spec_draft_layers=dlayers,
+                     spec_fanout=spec_fanout,
+                     spec_adaptive=args.spec_adaptive),
         SamplingParams(temperature=args.temperature, top_k=args.top_k,
                        top_p=args.top_p),
         draft_params=draft_params)

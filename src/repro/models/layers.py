@@ -297,16 +297,47 @@ def staircase_mask(length: jnp.ndarray, b: int, t: int, s: int) -> jnp.ndarray:
     return jnp.arange(s)[None, None, :] < lq[..., None]
 
 
+def ancestor_mask(length: jnp.ndarray, anc: Optional[jnp.ndarray],
+                  base: Optional[jnp.ndarray], window: int,
+                  b: int, t: int, s: int) -> jnp.ndarray:
+    """[B, T, S] tree-attention validity — the token-tree generalization of
+    :func:`staircase_mask` (which stays the chain special case).
+
+    A speculative token *tree* is fed as one flat block of ``window``
+    tokens written at cache positions ``base .. base + window - 1`` (BFS
+    order). Query (b, t) sees cache position s iff s < length[b, t] AND,
+    when s falls inside the fed window, bit ``s - base[b]`` of the
+    query's ancestor bitmap ``anc[b, t]`` is set (the bitmap holds the
+    query's root-to-self path, so siblings/uncles in the block stay
+    invisible). ``anc is None`` degenerates to the staircase. Shared by
+    both jnp decode attentions, the Pallas paged kernel's mask and its
+    oracle (`kernels/ref.py:tree_attention_ref`)."""
+    m = staircase_mask(length, b, t, s)
+    if anc is None:
+        return m
+    fed = (jnp.arange(s, dtype=jnp.int32)[None, None, :]
+           - base.astype(jnp.int32)[:, None, None])           # [B, 1, S]
+    in_win = (fed >= 0) & (fed < window)
+    bits = (anc.astype(jnp.int32)[:, :, None]
+            >> jnp.clip(fed, 0, 31)) & 1                       # [B, T, S]
+    return m & (~in_win | (bits == 1))
+
+
 def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
                           k_scale: jnp.ndarray, v_cache: jnp.ndarray,
                           v_scale: jnp.ndarray,
-                          length: jnp.ndarray) -> jnp.ndarray:
+                          length: jnp.ndarray,
+                          anc: Optional[jnp.ndarray] = None,
+                          anc_base: Optional[jnp.ndarray] = None,
+                          anc_window: int = 0) -> jnp.ndarray:
     """int8 KV-cache attention (beyond-paper GQSA extension: at 32k-context
     decode the cache, not the weights, dominates HBM traffic).
 
     q: [B, T, H, D] (T=1 decode; T=K+1 speculative verify); k/v_cache: int8
     [B, S, KH, D]; scales: f32 [B, S, KH]; length: [] / [B] / [B, T]
     per-query valid prefix (T > 1 is causal via a staircase length).
+    ``anc``/``anc_base``/``anc_window``: optional tree-attention ancestor
+    bitmaps (see :func:`ancestor_mask`) for token-tree verification.
     q is quantized per-head to int8 so the score contraction is an
     int8 x int8 -> int32 dot (half the cache read bytes of bf16); the
     softmax weights are likewise quantized so p @ v runs int8 x int8.
@@ -325,7 +356,8 @@ def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
            * q_sc.transpose(0, 2, 3, 1)[..., None]
            * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
            * scale)
-    valid = staircase_mask(length, b, t, s)                # [B, T, S]
+    valid = ancestor_mask(length, anc, anc_base, anc_window,
+                          b, t, s)                         # [B, T, S]
     sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
     p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     # fold the per-position value scale into p, then quantize p to int8
@@ -341,12 +373,17 @@ def decode_attention_int8(q: jnp.ndarray, k_cache: jnp.ndarray,
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                     v_cache: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+                     v_cache: jnp.ndarray, length: jnp.ndarray,
+                     anc: Optional[jnp.ndarray] = None,
+                     anc_base: Optional[jnp.ndarray] = None,
+                     anc_window: int = 0) -> jnp.ndarray:
     """Short-query attention against a cache.
 
     q: [B, T, H, D] (T=1 plain decode; T=K+1 for the speculative verify
     step's short-prefill); caches: [B, S, KH, D]; length: [] / [B] / [B, T]
-    valid prefix per query (a per-query staircase makes T > 1 causal).
+    valid prefix per query (a per-query staircase makes T > 1 causal);
+    ``anc``/``anc_base``/``anc_window``: optional token-tree ancestor
+    bitmaps (see :func:`ancestor_mask`).
     """
     b, s, khn, d = k_cache.shape
     dv = v_cache.shape[-1]
@@ -359,7 +396,8 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     qh = q.reshape(b, t, khn, r, d).astype(k_cache.dtype)
     sco = jnp.einsum("btkrd,bskd->bkrts", qh, k_cache,
                      preferred_element_type=jnp.float32) * scale
-    valid = staircase_mask(length, b, t, s)                # [B, T, S]
+    valid = ancestor_mask(length, anc, anc_base, anc_window,
+                          b, t, s)                         # [B, T, S]
     sco = jnp.where(valid[:, None, None, :, :], sco, -jnp.inf)
     p = jax.nn.softmax(sco, axis=-1)                       # [B,KH,R,T,S]
     o = jnp.einsum("bkrts,bskd->btkrd", p.astype(v_cache.dtype), v_cache,
@@ -510,11 +548,12 @@ def attention_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
 
 def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                            block_tables: jnp.ndarray, positions: jnp.ndarray,
-                           cfg, use_pallas=False
+                           cfg, use_pallas=False, tree: Optional[Dict] = None
                            ) -> Tuple[jnp.ndarray, Dict]:
     """One decode step of T tokens against a *paged* KV cache (one layer's
     view). T=1 is plain continuous-batching decode; T=K+1 is the
-    speculative-decoding verify step's per-slot short-prefill.
+    speculative-decoding verify step's per-slot short-prefill; a token
+    TREE block (``tree`` set) is the tree-speculative draft/verify path.
 
     x: [B, T, d]; positions: [B] write position of each slot's FIRST
     token (token t lands at positions + t); block_tables: [B, MP] page ids
@@ -529,6 +568,17 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     queries attend to earlier fed tokens exactly as a sequential decode
     would.
 
+    ``tree`` switches the block to token-tree semantics
+    (engine/spec/tree.py, DESIGN.md §8): the T fed tokens are a slice of
+    a flat BFS tree block of ``tree["window"]`` tokens whose root sits at
+    cache position ``positions - tree["start"]``. Storage stays
+    slot-sequential (token t still writes at positions + t) but RoPE runs
+    at the token's tree DEPTH (``tree["depths"]`` [T]) and the mask is
+    the per-query ancestor bitmap ``tree["anc"]`` [T] over the window
+    (:func:`ancestor_mask`) — so a node's K/V is rotated for the position
+    it would hold in sequential decode, and the accepted path can be
+    compacted by pure slot moves, no re-rotation.
+
     With ``use_pallas`` the attention runs the fused paged kernel
     (`kernels/paged_attention.py`): it streams each slot's live pages
     through VMEM directly — the dense `[B, MP*ps, ...]` page gather
@@ -542,12 +592,23 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     kp = cache["k_pages"]
     page_size = kp.shape[1]
     pos_bt = (positions[:, None].astype(jnp.int32)
-              + jnp.arange(t, dtype=jnp.int32)[None, :])
-    q, k, v = attn_qkv(p, x, pos_bt, cfg, use_pallas)
+              + jnp.arange(t, dtype=jnp.int32)[None, :])     # write slots
+    if tree is not None:
+        window = int(tree["window"])
+        base = positions.astype(jnp.int32) - jnp.int32(tree["start"])
+        rope_pos = base[:, None] + tree["depths"][None, :].astype(jnp.int32)
+        length = jnp.broadcast_to((base + window)[:, None], (b, t))
+        anc = jnp.broadcast_to(
+            tree["anc"][None, :].astype(jnp.int32), (b, t))
+    else:
+        window = 0
+        base = anc = None
+        rope_pos = pos_bt
+        length = pos_bt + 1                                  # [B, T]
+    q, k, v = attn_qkv(p, x, rope_pos, cfg, use_pallas)
     page = jnp.take_along_axis(block_tables, pos_bt // page_size,
                                axis=1)                       # [B, T]
     off = pos_bt % page_size
-    length = pos_bt + 1                                      # [B, T]
 
     def write(buf, new):                 # [P, ps, ...] <- [B, T, ...]
         return buf.at[page, off].set(new.astype(buf.dtype))
@@ -567,12 +628,15 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
             from repro.kernels import ops as kops
             o = kops.paged_decode_attention(
                 q, new["k_pages"], new["v_pages"], length, block_tables,
-                new["k_scale_pages"], new["v_scale_pages"]).astype(q.dtype)
+                new["k_scale_pages"], new["v_scale_pages"],
+                anc=anc, anc_base=base,
+                anc_window=window).astype(q.dtype)
         else:
             o = decode_attention_int8(q, view(new["k_pages"]),
                                       view(new["k_scale_pages"]),
                                       view(new["v_pages"]),
-                                      view(new["v_scale_pages"]), length)
+                                      view(new["v_scale_pages"]), length,
+                                      anc, base, window)
     else:
         new = {"k_pages": write(kp, k),
                "v_pages": write(cache["v_pages"], v)}
@@ -580,10 +644,12 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
             from repro.kernels import ops as kops
             o = kops.paged_decode_attention(
                 q, new["k_pages"], new["v_pages"], length,
-                block_tables).astype(q.dtype)
+                block_tables, anc=anc, anc_base=base,
+                anc_window=window).astype(q.dtype)
         else:
             o = decode_attention(q, view(new["k_pages"]),
-                                 view(new["v_pages"]), length)
+                                 view(new["v_pages"]), length,
+                                 anc, base, window)
     y = apply_linear(p["wo"], o.reshape(b, t, -1), use_pallas=use_pallas)
     return y, new
 

@@ -253,7 +253,8 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
 
 def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False,
-                block_tables=None, max_live_pages: Optional[int] = None
+                block_tables=None, max_live_pages: Optional[int] = None,
+                tree: Optional[Dict] = None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """tokens: [B, T]; pos: scalar shared step index OR [B] per-slot
     positions. ``cache`` is either the contiguous cache from
@@ -261,6 +262,12 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     :func:`init_paged_cache` (then ``block_tables`` [B, MP] is required
     and T may exceed 1: token t is written/attended at pos + t — the
     speculative-decoding verify step's per-slot short-prefill).
+
+    ``tree`` (paged cache only) switches the T fed tokens to token-tree
+    semantics: ``{"depths": [T], "anc": [T], "window": int, "start":
+    int}`` — RoPE at tree depth, per-query ancestor-bitmap masking over
+    the fed window (`models/layers.py:attention_decode_paged`,
+    DESIGN.md §8).
 
     ``max_live_pages`` (static) clamps the block tables to the batch's
     max *occupied* page count: every slot's allocation (prompt + budget
@@ -273,6 +280,8 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     paged = isinstance(cache, dict) and "k_pages" in cache
     if paged and block_tables is None:
         raise ValueError("paged cache decode requires block_tables")
+    if tree is not None and not paged:
+        raise ValueError("token-tree decode requires the paged cache")
     if paged and max_live_pages is not None:
         block_tables = block_tables[
             :, :max(1, min(max_live_pages, block_tables.shape[1]))]
@@ -284,7 +293,7 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
         if paged:
             a, new_c = L.attention_decode_paged(lp["attn"], hn, lc,
                                                 block_tables, pos, cfg,
-                                                use_pallas)
+                                                use_pallas, tree=tree)
         elif cfg.family == "mla_moe":
             a, new_c = MLA.mla_decode(lp["attn"], hn, lc, pos, cfg,
                                       use_pallas)

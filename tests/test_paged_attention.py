@@ -279,6 +279,131 @@ def test_spec_greedy_lossless_with_kernel_path(tiny):
         assert out0[r0] == out1[r1]
 
 
+# ---------------------------------------------------------------------------
+# token-tree ancestor masks: kernel vs oracle (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _tree_case(seed, b, fanout, kh, r, d, ps, mp, num_pages, int8=False):
+    """Random tree-verify instance: every slot feeds the same BFS tree
+    block (window = N+1 tokens) at its own random base position inside
+    its occupied pages; block tables end in OOB sentinels."""
+    from repro.engine.spec import TreeTemplate
+    tpl = TreeTemplate(fanout)
+    w = tpl.n_nodes + 1
+    g = np.random.default_rng(seed)
+    t = w
+    q = jnp.asarray(g.normal(size=(b, t, kh * r, d)), jnp.float32)
+    kp = jnp.asarray(g.normal(size=(num_pages, ps, kh, d)), jnp.float32)
+    vp = jnp.asarray(g.normal(size=(num_pages, ps, kh, d)), jnp.float32)
+    pages = g.permutation(num_pages)[:b * mp].reshape(b, mp).astype(np.int32)
+    need = -(-w // ps) + 1                       # pages the window spans
+    occ = g.integers(need, mp + 1, size=b)
+    bt = np.where(np.arange(mp)[None, :] < occ[:, None], pages, num_pages)
+    base = np.stack([g.integers(0, occ[i] * ps - w + 1) for i in range(b)])
+    lengths = np.broadcast_to((base + w)[:, None], (b, t)).astype(np.int32)
+    anc = np.broadcast_to(tpl.anc[None, :], (b, t)).astype(np.int32)
+    ksc = vsc = None
+    if int8:
+        kp, ksc = quantize_kv(kp.astype(jnp.float32))
+        vp, vsc = quantize_kv(vp.astype(jnp.float32))
+    return (q, kp, vp, jnp.asarray(lengths), jnp.asarray(bt),
+            jnp.asarray(anc), jnp.asarray(base.astype(np.int32)), w,
+            ksc, vsc)
+
+
+@pytest.mark.parametrize("fanout", [(1,), (2,), (2, 2), (4, 2), (1, 3, 2)])
+@pytest.mark.parametrize("int8", [False, True])
+def test_tree_kernel_matches_tree_oracle(fanout, int8):
+    q, kp, vp, lengths, bt, anc, base, w, ksc, vsc = _tree_case(
+        sum(fanout) + int8, b=3, fanout=fanout, kh=2, r=2, d=32, ps=4,
+        mp=6, num_pages=20, int8=int8)
+    o_ref = kref.tree_attention_ref(q, kp, vp, lengths, bt, anc, base, w,
+                                    ksc, vsc)
+    o_ker = ops.paged_decode_attention(q, kp, vp, lengths, bt, ksc, vsc,
+                                       anc=anc, anc_base=base, anc_window=w,
+                                       use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kh,r", [(1, 8), (4, 1)])
+def test_tree_kernel_gqa_ratios(kh, r):
+    q, kp, vp, lengths, bt, anc, base, w, ksc, vsc = _tree_case(
+        13 * kh + r, b=2, fanout=(2, 2), kh=kh, r=r, d=64, ps=8, mp=4,
+        num_pages=10)
+    o_ref = kref.tree_attention_ref(q, kp, vp, lengths, bt, anc, base, w)
+    o_ker = ops.paged_decode_attention(q, kp, vp, lengths, bt,
+                                       anc=anc, anc_base=base, anc_window=w,
+                                       use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_kernel_all_sentinel_slot_is_finite():
+    q, kp, vp, lengths, bt, anc, base, w, _, _ = _tree_case(
+        29, b=2, fanout=(2, 2), kh=2, r=2, d=32, ps=4, mp=6, num_pages=20)
+    bt = bt.at[1].set(kp.shape[0])                # slot 1: no pages
+    o_ref = kref.tree_attention_ref(q, kp, vp, lengths, bt, anc, base, w)
+    o_ker = ops.paged_decode_attention(q, kp, vp, lengths, bt,
+                                       anc=anc, anc_base=base, anc_window=w,
+                                       use_pallas=True, interpret=True)
+    assert np.isfinite(np.asarray(o_ker)).all()
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_kernel_chain_bitmaps_bit_identical_to_staircase():
+    """The staircase IS the chain special case: running the kernel with
+    prefix-of-ones ancestor bitmaps produces BIT-IDENTICAL output to the
+    plain lengths-only kernel (same mask booleans, same float pipeline)."""
+    q, kp, vp, lengths, bt, ksc, vsc = _case(41, b=2, t=4, kh=2, r=2,
+                                             d=32, ps=8, mp=4, num_pages=16)
+    base = jnp.min(lengths, axis=1) - 1           # first fed position
+    w = 4
+    chain_anc = jnp.broadcast_to(
+        jnp.asarray([(1 << (i + 1)) - 1 for i in range(w)],
+                    jnp.int32)[None, :], (2, w))
+    # staircase lengths equivalent to base + bitmap windowing
+    stair = (base[:, None] + 1 + jnp.arange(w)[None, :]).astype(jnp.int32)
+    o_plain = ops.paged_decode_attention(q, kp, vp, stair, bt,
+                                         use_pallas=True, interpret=True)
+    o_tree = ops.paged_decode_attention(
+        q, kp, vp, jnp.broadcast_to((base + w)[:, None], (2, w)), bt,
+        anc=chain_anc, anc_base=base, anc_window=w,
+        use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_tree), np.asarray(o_plain))
+
+
+def test_spec_tree_greedy_lossless_with_kernel_path(tiny):
+    """Acceptance pin: greedy TREE-spec decode == greedy non-spec, token
+    for token, with the Pallas paged-attention path enabled in BOTH
+    (ancestor-mask kernel on the draft + verify calls)."""
+    from repro.core.model_compress import compress_draft, draft_layers
+    from repro.engine import EngineConfig, InferenceEngine, SamplingParams
+    cfg, api, params = tiny
+    draft = compress_draft(params, cfg, profile="w4l50")
+    prompts = [np.random.default_rng(s).integers(
+        0, cfg.vocab, size=4 + s).astype(np.int32) for s in range(3)]
+
+    def run(fanout):
+        eng = InferenceEngine(
+            cfg, params,
+            EngineConfig(num_slots=2, max_seq=24, page_size=4,
+                         use_pallas=True, spec_fanout=fanout,
+                         spec_draft_layers=(draft_layers(cfg, "w4l50")
+                                            if fanout else None)),
+            SamplingParams(),
+            draft_params=draft if fanout else None)
+        rids = [eng.submit(p, 5) for p in prompts]
+        res = eng.run()
+        return {r["rid"]: list(r["tokens"]) for r in res["results"]}, rids
+
+    out0, rids0 = run(None)
+    out1, rids1 = run((2, 2))
+    for r0, r1 in zip(rids0, rids1):
+        assert out0[r0] == out1[r1]
+
+
 def test_staircase_mask_shared_semantics():
     """The shared helper IS the masking of both jnp attentions: scalar,
     [B] and [B, T] length specs broadcast identically."""
