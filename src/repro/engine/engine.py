@@ -117,9 +117,11 @@ class InferenceEngine:
                  sampling: SamplingParams = SamplingParams(),
                  draft_params=None):
         api = get_model(cfg)
-        if api.prefill is None or api.init_paged_cache is None:
+        if not api.supports_paged_cache:
+            from repro.models.registry import paged_families
             raise NotImplementedError(
-                f"family {cfg.family!r} lacks prefill/paged-cache support")
+                f"family {cfg.family!r} lacks prefill/paged-cache support "
+                f"(supported: {', '.join(paged_families())})")
         self._spec_tree = engine_cfg.spec_fanout is not None
         spec = engine_cfg.spec_k > 0 or self._spec_tree
         if spec and draft_params is None:

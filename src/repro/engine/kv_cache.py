@@ -54,9 +54,11 @@ class PagedKVCache:
     def __init__(self, cfg, api, num_slots: int, max_seq: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  lookahead: int = 0):
-        if api.init_paged_cache is None:
+        if not api.supports_paged_cache:
+            from repro.models.registry import paged_families
             raise NotImplementedError(
-                f"model family {cfg.family!r} has no paged-cache support")
+                f"model family {cfg.family!r} has no paged-cache support "
+                f"(supported: {', '.join(paged_families())})")
         self.page_size = page_size
         # ``lookahead``: extra writable positions past a slot's budget for
         # speculative decoding — the verify step scatters its whole fed

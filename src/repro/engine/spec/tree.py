@@ -227,7 +227,9 @@ def build_tree_verify_fn(cfg, api, sampling: SamplingParams,
         nxt = jnp.take_along_axis(
             out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
         tokens = jnp.where(n_new > 0, nxt, tokens)
-        page_size = cache["k_pages"].shape[2]
+        # leaves are [L, P, ps, ...] for every paged layout (K/V pools or
+        # the MLA latent pool) — compaction is the same block-table move
+        page_size = jax.tree_util.tree_leaves(cache)[0].shape[2]
         cache = compact_accepted(cache, block_tables, positions, path,
                                  n_new, page_size)
         positions = positions + n_new

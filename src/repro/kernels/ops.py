@@ -153,6 +153,21 @@ def dense_bytes_model(n: int, k: int, batch: int = 1,
                 flops=2 * batch * n * k)
 
 
+def _paged_query_prep(lengths, block_tables, b: int, t: int,
+                      page_size: int):
+    """Shared preamble of the paged-attention dispatchers: broadcast the
+    [] / [B] / [B, T] length spec to the kernel's [B, T] row operand and
+    derive the live-page counts the scalar prefetch consumes — ONE
+    definition so the GQA and latent entry points can never
+    desynchronize on the rounding/sentinel convention."""
+    from repro.models.layers import _query_lengths
+    lq = _query_lengths(lengths, b, t).astype(jnp.int32)     # [B, T]
+    mp = block_tables.shape[1]
+    live = jnp.clip(
+        (jnp.max(lq, axis=1) + page_size - 1) // page_size, 0, mp)
+    return lq, live
+
+
 def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
                            k_scale_pages=None, v_scale_pages=None, *,
                            anc=None, anc_base=None, anc_window: int = 0,
@@ -185,24 +200,62 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
     if interpret is None:
         interpret = not _on_tpu()
     from repro.kernels.paged_attention import paged_attention_pallas
-    from repro.models.layers import _query_lengths
     b, t, h, d = q.shape
     page_size = k_pages.shape[1]
     khn = k_pages.shape[2]
     r = h // khn
-    mp = block_tables.shape[1]
-    lq = _query_lengths(lengths, b, t).astype(jnp.int32)     # [B, T]
+    lq, live = _paged_query_prep(lengths, block_tables, b, t, page_size)
     # kernel row layout: [B, KH, T*R, D], T-major inside the row dim
     qh = q.reshape(b, t, khn, r, d).transpose(0, 2, 1, 3, 4) \
           .reshape(b, khn, t * r, d)
-    live = jnp.clip(
-        (jnp.max(lq, axis=1) + page_size - 1) // page_size, 0, mp)
     o = paged_attention_pallas(qh, k_pages, v_pages, lq, block_tables,
                                live, k_scale_pages, v_scale_pages,
                                t=t, anc=anc, anc_base=anc_base,
                                anc_window=anc_window, interpret=interpret)
     return o.reshape(b, khn, t, r, d).transpose(0, 2, 1, 3, 4) \
             .reshape(b, t, h, d)
+
+
+def paged_latent_attention(q, lat_pages, lengths, block_tables, *,
+                           v_rank: int, anc=None, anc_base=None,
+                           anc_window: int = 0, use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """Fused decode attention on the paged MLA LATENT pool (DESIGN.md §9).
+
+    q: [B, T, H, R + rope] absorbed-W_UK queries, PRE-SCALED by
+    sqrt(fake/true) (`models/mla.py:_absorbed_q` — the kernel divides by
+    sqrt(R + rope)); lat_pages: [P, ps, R + rope] — one logical KV head,
+    post-norm c_kv ++ post-RoPE k_rope per token; lengths / block_tables
+    / anc semantics exactly as :func:`paged_decode_attention`. Returns
+    the latent context [B, T, H, v_rank] f32: the value of a cached
+    token is the leading ``v_rank`` (= kv_lora_rank) dims of its latent
+    row — there is no V pool, and W_UV is applied by the caller AFTER
+    attention.
+
+    The Pallas path shares the scalar-prefetch/block-table machinery of
+    the GQA kernel (``v_pages=None`` latent mode: V = K pages, lane-dim
+    tiled scores for R + rope > 128) and computes the full R + rope
+    value columns (sliced here — column independence makes the leading
+    dims identical); the jnp path is the dense-gather reference
+    (`kernels/ref.py:paged_latent_attention_ref`).
+    """
+    if not use_pallas:
+        return kref.paged_latent_attention_ref(
+            q, lat_pages, lengths, block_tables, v_rank, anc=anc,
+            anc_base=anc_base, anc_window=anc_window)
+    if interpret is None:
+        interpret = not _on_tpu()
+    from repro.kernels.paged_attention import paged_attention_pallas
+    b, t, h, d = q.shape
+    page_size = lat_pages.shape[1]
+    lq, live = _paged_query_prep(lengths, block_tables, b, t, page_size)
+    # kernel row layout: [B, KH=1, T*H, D], T-major inside the row dim
+    qh = q.reshape(b, t * h, d)[:, None]
+    o = paged_attention_pallas(qh, lat_pages[:, :, None, :], None, lq,
+                               block_tables, live, t=t, anc=anc,
+                               anc_base=anc_base, anc_window=anc_window,
+                               interpret=interpret)
+    return o.reshape(b, t, h, d)[..., :v_rank]
 
 
 def kv_decode_attention(q, k_cache, k_scale, v_cache, v_scale, length, *,

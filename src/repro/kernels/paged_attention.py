@@ -60,6 +60,15 @@ is a VMEM row operand like ``lengths``. With ``anc`` absent the compiled
 kernel is UNCHANGED (the staircase is the chain special case —
 `models/layers.py:ancestor_mask` is the shared mask definition).
 
+MLA LATENT pages (DESIGN.md §9) are the ``v_pages=None`` mode: the pool
+holds one [ps, kv_lora_rank + qk_rope_dim] latent row per token (a
+single logical KV head), the value operand IS the key page (no V pool —
+callers up-project through W_UV after slicing the leading R dims of the
+output), and the score contraction is lane-dim tiled: R + rope = 576 at
+DeepSeek scale exceeds one 128-lane MXU tile, so the dot runs as a
+statically unrolled sum of 128-wide partial products. With ``v_pages``
+present and D <= 128 the compiled kernel is UNCHANGED.
+
 Rows (T*R) and D are used as-is — adequate for interpret mode (the
 repo's off-TPU convention) and for MXU-friendly head dims; a deployment
 at exotic head dims should pad rows to the sublane multiple in
@@ -80,6 +89,10 @@ def _kernel(bt_ref, live_ref,                       # scalar prefetch
             *, page_size: int, t: int, r: int,
             ks_ref=None, vs_ref=None,
             anc_ref=None, base_ref=None, window: int = 0):
+    # ``v_ref is None`` is the LATENT mode (MLA, DESIGN.md §9): the pool
+    # holds one latent row per token and the value IS that row (callers
+    # slice the leading kv_lora_rank dims of the output) — V = K, one
+    # page fetch instead of two.
     bi = pl.program_id(0)
     pi = pl.program_id(2)
     npg = pl.num_programs(2)
@@ -99,14 +112,29 @@ def _kernel(bt_ref, live_ref,                       # scalar prefetch
 
         # dequantize this page tile in VMEM (HBM traffic stays int8)
         k = k_ref[0, :, 0, :].astype(jnp.float32)    # [ps, D]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        v = k if v_ref is None else v_ref[0, :, 0, :].astype(jnp.float32)
         if ks_ref is not None:
             k = k * ks_ref[0, :, 0][:, None]
             v = v * vs_ref[0, :, 0][:, None]
 
-        sco = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale      # [TR, ps]
+        def qk_dot(qc, kc):
+            return jax.lax.dot_general(
+                qc, kc, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)          # [TR, ps]
+
+        if d > 128:
+            # lane-dim tiling: the MLA latent head (kv_lora_rank +
+            # qk_rope_dim = 576 at DeepSeek scale) exceeds one 128-lane
+            # MXU tile, so the contraction runs as a statically unrolled
+            # sum of 128-wide partial dots (the trailing ragged chunk is
+            # narrower; Mosaic pads it). d <= 128 keeps the single-dot
+            # program every pre-existing caller compiled to.
+            sco = qk_dot(q[:, :128], k[:, :128])
+            for lo in range(128, d, 128):
+                sco += qk_dot(q[:, lo:lo + 128], k[:, lo:lo + 128])
+            sco *= scale
+        else:
+            sco = qk_dot(q, k) * scale
 
         # per-query staircase mask: query t sees positions < lengths[b, t]
         pos = pi * page_size + jax.lax.broadcasted_iota(
@@ -166,13 +194,23 @@ def paged_attention_pallas(
     anc_window: int = 0,       # fed-block width (bits used in anc)
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns [B, KH, T*R, D] f32. See module docstring for semantics."""
+    """Returns [B, KH, T*R, D] f32. See module docstring for semantics.
+
+    ``v_pages=None`` selects the LATENT mode (MLA latent pool, one
+    logical KV head): the value operand is the key page itself, so each
+    grid step DMAs one pool page instead of two; callers slice the
+    leading ``kv_lora_rank`` dims of the output
+    (`ops.paged_latent_attention`)."""
     b, khn, tr, d = q.shape
     r = tr // t
     num_pages, page_size = k_pages.shape[0], k_pages.shape[1]
     mp = block_tables.shape[1]
     int8 = k_scale_pages is not None
     tree = anc is not None
+    latent = v_pages is None
+    if latent and int8:
+        raise NotImplementedError("int8 latent pages are a recorded "
+                                  "follow-on (ROADMAP)")
     grid = (b, khn, mp)
 
     # index maps take the scalar-prefetch operands after the grid ids; the
@@ -205,9 +243,11 @@ def paged_attention_pallas(
         in_specs.append(pl.BlockSpec((1, t), len_map))
         args.append(anc.astype(jnp.int32))
     in_specs += [pl.BlockSpec((1, 1, tr, d), row_map),
-                 pl.BlockSpec((1, page_size, 1, d), page_map),
                  pl.BlockSpec((1, page_size, 1, d), page_map)]
-    args += [q, k_pages, v_pages]
+    args += [q, k_pages]
+    if not latent:
+        in_specs.append(pl.BlockSpec((1, page_size, 1, d), page_map))
+        args.append(v_pages)
     if int8:
         in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
                      pl.BlockSpec((1, page_size, 1), scale_map)]
@@ -220,7 +260,10 @@ def paged_attention_pallas(
         anc_ref = None
         if tree:
             anc_ref = refs[i]; i += 1
-        q_ref, k_ref, v_ref = refs[i:i + 3]; i += 3
+        q_ref, k_ref = refs[i:i + 2]; i += 2
+        v_ref = None
+        if not latent:
+            v_ref = refs[i]; i += 1
         ks_ref = vs_ref = None
         if int8:
             ks_ref, vs_ref = refs[i:i + 2]; i += 2

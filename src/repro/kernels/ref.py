@@ -125,6 +125,37 @@ def paged_attention_ref(q, k_pages, v_pages, lengths, block_tables,
     return o.reshape(b, t, h, d).astype(dtype)
 
 
+def paged_latent_attention_ref(q, lat_pages, lengths, block_tables,
+                               v_rank: int, dtype=jnp.float32, *,
+                               anc=None, anc_base=None,
+                               anc_window: int = 0):
+    """Oracle + GSPMD/dry-run path for the paged LATENT attention kernel
+    (MLA, DESIGN.md §9).
+
+    q: [B, T, H, R + rope] absorbed pre-scaled queries; lat_pages:
+    [P, ps, R + rope] — a single logical KV head whose value is the
+    leading ``v_rank`` dims of the same row (no V pool). Dense page
+    gather followed by single-head attention with the shared
+    staircase/ancestor masks; sentinel block-table entries clamp to
+    P - 1 exactly like :func:`paged_attention_ref`. Returns
+    [B, T, H, v_rank].
+    """
+    from repro.models.layers import ancestor_mask
+    b, t, h, d = q.shape
+    num_pages, ps, dl = lat_pages.shape
+    g = lat_pages[jnp.minimum(block_tables, num_pages - 1)]
+    k = g.reshape(b, -1, dl).astype(jnp.float32)           # [B, S, R+rope]
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    sco = jnp.einsum("bthd,bsd->bhts", q.astype(jnp.float32), k) * scale
+    valid = ancestor_mask(lengths, anc, anc_base, anc_window,
+                          b, t, s)                         # [B, T, S]
+    sco = jnp.where(valid[:, None, :, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)                       # [B, H, T, S]
+    o = jnp.einsum("bhts,bsd->bthd", p, k[..., :v_rank])
+    return o.astype(dtype)
+
+
 def tree_attention_ref(q, k_pages, v_pages, lengths, block_tables,
                        anc, anc_base, anc_window: int,
                        k_scale_pages=None, v_scale_pages=None,

@@ -107,6 +107,13 @@ def main(argv=None):
         ap.error("--spec-adaptive requires --spec-tree")
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    # fail early, before any params are built: the engine needs the
+    # family's paged cache + batched prefill (registry capability flag)
+    if not get_model(cfg).supports_paged_cache:
+        from repro.models.registry import paged_families
+        ap.error(f"--arch {args.arch}: family {cfg.family!r} has no "
+                 f"paged-cache support "
+                 f"(supported: {', '.join(paged_families())})")
     rng = jax.random.PRNGKey(args.seed)
     # the FP tree is only needed as the shared source of target + draft
     # compression; don't keep a full-scale checkpoint alive otherwise

@@ -546,6 +546,37 @@ def attention_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def paged_block_geometry(positions: jnp.ndarray, t: int,
+                         tree: Optional[Dict]):
+    """Position/mask plumbing shared by every paged decode block
+    (:func:`attention_decode_paged` and `models/mla.py:mla_decode_paged`).
+
+    ``positions`` [B] is the write position of each slot's FIRST fed
+    token (token t lands at positions + t). Returns ``(pos_bt [B, T]
+    write positions, rope_pos [B, T] RoPE positions, length [B, T]
+    per-query valid prefix, base [B] | None, anc [B, T] | None,
+    window int)`` — the chain staircase when ``tree`` is None, else the
+    token-tree semantics of DESIGN.md §8 (RoPE at tree DEPTH, ancestor
+    bitmaps over the fed window, storage still slot-sequential).
+    """
+    b = positions.shape[0]
+    pos_bt = (positions[:, None].astype(jnp.int32)
+              + jnp.arange(t, dtype=jnp.int32)[None, :])     # write slots
+    if tree is not None:
+        window = int(tree["window"])
+        base = positions.astype(jnp.int32) - jnp.int32(tree["start"])
+        rope_pos = base[:, None] + tree["depths"][None, :].astype(jnp.int32)
+        length = jnp.broadcast_to((base + window)[:, None], (b, t))
+        anc = jnp.broadcast_to(
+            tree["anc"][None, :].astype(jnp.int32), (b, t))
+    else:
+        window = 0
+        base = anc = None
+        rope_pos = pos_bt
+        length = pos_bt + 1                                  # [B, T]
+    return pos_bt, rope_pos, length, base, anc, window
+
+
 def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                            block_tables: jnp.ndarray, positions: jnp.ndarray,
                            cfg, use_pallas=False, tree: Optional[Dict] = None
@@ -591,20 +622,8 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     b, t, _ = x.shape
     kp = cache["k_pages"]
     page_size = kp.shape[1]
-    pos_bt = (positions[:, None].astype(jnp.int32)
-              + jnp.arange(t, dtype=jnp.int32)[None, :])     # write slots
-    if tree is not None:
-        window = int(tree["window"])
-        base = positions.astype(jnp.int32) - jnp.int32(tree["start"])
-        rope_pos = base[:, None] + tree["depths"][None, :].astype(jnp.int32)
-        length = jnp.broadcast_to((base + window)[:, None], (b, t))
-        anc = jnp.broadcast_to(
-            tree["anc"][None, :].astype(jnp.int32), (b, t))
-    else:
-        window = 0
-        base = anc = None
-        rope_pos = pos_bt
-        length = pos_bt + 1                                  # [B, T]
+    pos_bt, rope_pos, length, base, anc, window = paged_block_geometry(
+        positions, t, tree)
     q, k, v = attn_qkv(p, x, rope_pos, cfg, use_pallas)
     page = jnp.take_along_axis(block_tables, pos_bt // page_size,
                                axis=1)                       # [B, T]

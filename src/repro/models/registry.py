@@ -12,7 +12,7 @@ frames (encdec).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,15 @@ class ModelAPI:
     init_paged_cache: Optional[Callable] = None  # (cfg, n_pages, page_size)
     prefill: Optional[Callable] = None  # (params, cache, tokens, lengths,
     #                                      block_tables, cfg, dist, ...)
+
+    @property
+    def supports_paged_cache(self) -> bool:
+        """Continuous-batching capability: the family provides BOTH the
+        paged pool layout and the batched prefill (the engine needs the
+        pair — `engine/kv_cache.py`, `launch/serve.py` and the engine
+        constructor all gate on this flag and report
+        :func:`paged_families` in their error)."""
+        return self.init_paged_cache is not None and self.prefill is not None
 
 
 def _tf_forward(params, batch, cfg, dist=None, use_pallas=False,
@@ -69,7 +78,9 @@ _FAMILIES: Dict[str, ModelAPI] = {
                     init_paged_cache=transformer.init_paged_cache,
                     prefill=transformer.prefill),
     "mla_moe": ModelAPI(transformer.init_params, _tf_forward,
-                        transformer.init_cache, transformer.decode_step),
+                        transformer.init_cache, transformer.decode_step,
+                        init_paged_cache=transformer.init_paged_cache,
+                        prefill=transformer.prefill),
     "vlm": ModelAPI(transformer.init_params, _tf_forward,
                     transformer.init_cache, transformer.decode_step,
                     init_paged_cache=transformer.init_paged_cache,
@@ -82,6 +93,14 @@ _FAMILIES: Dict[str, ModelAPI] = {
     "ssm": ModelAPI(ssm_lm.init_params, _ssm_forward,
                     ssm_lm.init_cache, ssm_lm.decode_step),
 }
+
+
+def paged_families() -> List[str]:
+    """Families the continuous-batching engine can serve (paged cache +
+    batched prefill) — the supported-family list quoted by every
+    paged-cache capability error."""
+    return sorted(f for f, api in _FAMILIES.items()
+                  if api.supports_paged_cache)
 
 
 def get_model(cfg) -> ModelAPI:

@@ -164,11 +164,20 @@ def init_paged_cache(cfg, num_pages: int, page_size: int,
                      dtype=None) -> Dict:
     """Paged KV pool: fixed-size pages shared by all slots via per-request
     block tables (see DESIGN.md §3). Leaves are [L, P, ps, ...] so the
-    decode scan hands each layer its [P, ps, ...] view."""
-    if cfg.family == "mla_moe":
-        raise NotImplementedError("paged cache: MLA latent cache not "
-                                  "supported yet; use init_cache")
+    decode scan hands each layer its [P, ps, ...] view.
+
+    ``mla_moe`` pages the LATENT cache (DESIGN.md §9): one pool of
+    [L, P, ps, kv_lora_rank + qk_rope_dim] rows — a single logical KV
+    "head" per page, and NO V pool (values are up-projected from the
+    latent through W_UV after attention). Latent pages stay in the
+    compute dtype regardless of ``kv_cache_dtype`` (int8 latent pages
+    are a recorded follow-on, ROADMAP)."""
     dtype = dtype or cfg.compute_dtype
+    if cfg.family == "mla_moe":
+        m = cfg.mla
+        return {"lat_pages": jnp.zeros(
+            (cfg.n_layers, num_pages, page_size,
+             m.kv_lora_rank + m.qk_rope_dim), dtype)}
     lyr, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
     if cfg.kv_cache_dtype == "int8":
         return {"k_pages": jnp.zeros((lyr, num_pages, page_size, kh, hd),
@@ -197,8 +206,8 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
     Returns (last-valid-token logits [B, 1, V], filled cache).
     """
     b, s = tokens.shape
-    kp = cache["k_pages"]
-    num_pages, page_size = kp.shape[1], kp.shape[2]
+    leaf = jax.tree_util.tree_leaves(cache)[0]
+    num_pages, page_size = leaf.shape[1], leaf.shape[2]
     h = embed_tokens(params, tokens, cfg)
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     # (b, s) -> flat page/offset; invalid (padding) positions -> OOB page
@@ -206,41 +215,50 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
         block_tables, positions // page_size, axis=1)       # [B, S]
     page = jnp.where(positions < lengths[:, None], page, num_pages)
     off = positions % page_size
+    mla = cfg.family == "mla_moe"
     int8 = "k_scale_pages" in cache
 
     def body(carry, xs):
         hh = carry
         lp, lc = xs
         hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
-        q, k, v = L.attn_qkv(lp["attn"], hn, positions, cfg, use_pallas)
-        o = L.flash_attention(q, k, v, causal=True,
-                              block_q=cfg.attn_block_q,
-                              block_k=cfg.attn_block_k,
-                              unroll=cfg.analysis_unroll)
-        a = apply_linear(lp["attn"]["wo"], o.reshape(b, s, -1),
-                         use_pallas=use_pallas)
+        if mla:
+            # full-seq latent attention; the latent row (post-norm c_kv
+            # ++ post-RoPE k_rope) pages as ONE pool — no V scatter
+            a, latent = MLA.mla_prefill_paged(lp["attn"], hn, positions,
+                                              cfg, use_pallas)
+            new_c = {"lat_pages": lc["lat_pages"].at[page, off].set(
+                latent.astype(lc["lat_pages"].dtype))}
+        else:
+            q, k, v = L.attn_qkv(lp["attn"], hn, positions, cfg, use_pallas)
+            o = L.flash_attention(q, k, v, causal=True,
+                                  block_q=cfg.attn_block_q,
+                                  block_k=cfg.attn_block_k,
+                                  unroll=cfg.analysis_unroll)
+            a = apply_linear(lp["attn"]["wo"], o.reshape(b, s, -1),
+                             use_pallas=use_pallas)
+            if int8:
+                k_i8, k_sc = L.quantize_kv(k)
+                v_i8, v_sc = L.quantize_kv(v)
+                new_c = {
+                    "k_pages": lc["k_pages"].at[page, off].set(k_i8),
+                    "v_pages": lc["v_pages"].at[page, off].set(v_i8),
+                    "k_scale_pages":
+                        lc["k_scale_pages"].at[page, off].set(k_sc),
+                    "v_scale_pages":
+                        lc["v_scale_pages"].at[page, off].set(v_sc)}
+            else:
+                new_c = {
+                    "k_pages": lc["k_pages"].at[page, off].set(
+                        k.astype(lc["k_pages"].dtype)),
+                    "v_pages": lc["v_pages"].at[page, off].set(
+                        v.astype(lc["v_pages"].dtype))}
         hh = hh + a
         hn = L.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
             m, _ = MOE.moe_block(lp["moe"], hn, cfg, dist, use_pallas)
         else:
             m = L.mlp_block(lp["mlp"], hn, cfg.mlp_type, use_pallas)
-        if int8:
-            k_i8, k_sc = L.quantize_kv(k)
-            v_i8, v_sc = L.quantize_kv(v)
-            new_c = {
-                "k_pages": lc["k_pages"].at[page, off].set(k_i8),
-                "v_pages": lc["v_pages"].at[page, off].set(v_i8),
-                "k_scale_pages":
-                    lc["k_scale_pages"].at[page, off].set(k_sc),
-                "v_scale_pages":
-                    lc["v_scale_pages"].at[page, off].set(v_sc)}
-        else:
-            new_c = {
-                "k_pages": lc["k_pages"].at[page, off].set(
-                    k.astype(lc["k_pages"].dtype)),
-                "v_pages": lc["v_pages"].at[page, off].set(
-                    v.astype(lc["v_pages"].dtype))}
         return hh + m, new_c
 
     h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
@@ -262,6 +280,9 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     :func:`init_paged_cache` (then ``block_tables`` [B, MP] is required
     and T may exceed 1: token t is written/attended at pos + t — the
     speculative-decoding verify step's per-slot short-prefill).
+    ``mla_moe`` paged caches route through the absorbed latent path
+    (`models/mla.py:mla_decode_paged`); everything below — staircase,
+    tree, clamp — applies unchanged.
 
     ``tree`` (paged cache only) switches the T fed tokens to token-tree
     semantics: ``{"depths": [T], "anc": [T], "window": int, "start":
@@ -277,7 +298,8 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     O(max_pages) to O(occupied pages). The engine buckets the value
     (pow2) so retraces stay bounded. Returns (logits [B, T, V], cache).
     """
-    paged = isinstance(cache, dict) and "k_pages" in cache
+    paged = isinstance(cache, dict) and ("k_pages" in cache
+                                         or "lat_pages" in cache)
     if paged and block_tables is None:
         raise ValueError("paged cache decode requires block_tables")
     if tree is not None and not paged:
@@ -290,7 +312,11 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     def body(hh, xs):
         lp, lc = xs
         hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
-        if paged:
+        if paged and cfg.family == "mla_moe":
+            a, new_c = MLA.mla_decode_paged(lp["attn"], hn, lc,
+                                            block_tables, pos, cfg,
+                                            use_pallas, tree=tree)
+        elif paged:
             a, new_c = L.attention_decode_paged(lp["attn"], hn, lc,
                                                 block_tables, pos, cfg,
                                                 use_pallas, tree=tree)
