@@ -171,19 +171,28 @@ def time_call(fn, *args, warmup=2, iters=5) -> float:
 _EMITTED: dict = {}
 
 
-def emit(name: str, us_per_call: float, derived: str, **metrics):
+def emit(name: str, us_per_call: float, derived: str, timed: bool = True,
+         **metrics):
     """CSV line to stdout + an in-memory record for :func:`write_bench_json`.
 
     ``metrics`` are machine-readable extras (tok_per_s, ttft_ms_p50,
     acceptance_rate, ...) so the perf trajectory is comparable across PRs
     without parsing the human-oriented ``derived`` string.
+
+    ``timed=False`` marks a record whose payload is the derived metrics,
+    not a wall-clock measurement (traffic models, byte ratios): the JSON
+    record carries ``"timed": false`` INSTEAD of a ``us_per_call`` key,
+    so trend tooling never mistakes the 0.0 placeholder for a real
+    latency regression to compare against. The CSV stdout line keeps its
+    three-column shape either way.
     """
     print(f"{name},{us_per_call:.1f},{derived}")
-    _EMITTED[name] = {"us_per_call": round(float(us_per_call), 1),
-                      "derived": derived,
-                      **{k: (round(float(v), 4)
-                             if isinstance(v, float) else v)
-                         for k, v in metrics.items()}}
+    rec = {"us_per_call": round(float(us_per_call), 1)} if timed \
+        else {"timed": False}
+    rec["derived"] = derived
+    rec.update({k: (round(float(v), 4) if isinstance(v, float) else v)
+                for k, v in metrics.items()})
+    _EMITTED[name] = rec
 
 
 def write_bench_json(filename: str = "BENCH_serve.json") -> Path:

@@ -124,7 +124,7 @@ def main(argv=None):
              kv_bytes=occ * B * ps * item, speedup_vs_dense=wall)
         emit(f"paged_attn_kernel_{tag}", 0.0,
              f"live-page stream: {traffic:.2f}x less KV traffic than "
-             f"dense ({live_bytes/2**20:.2f} MiB)",
+             f"dense ({live_bytes/2**20:.2f} MiB)", timed=False,
              kv_bytes=live_bytes, traffic_ratio_vs_dense=traffic)
         if ctx >= 8192:
             speedup_8k.append(wall)
@@ -134,7 +134,7 @@ def main(argv=None):
     if speedup_8k:
         emit("paged_attn_speedup_8k", 0.0,
              f"min measured clamped-vs-dense speedup at 8k ctx: "
-             f"{min(speedup_8k):.2f}x",
+             f"{min(speedup_8k):.2f}x", timed=False,
              speedup=round(min(speedup_8k), 2))
     write_bench_json()
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.engine import EngineConfig, InferenceEngine, SamplingParams
+from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
+                          Telemetry)
 from repro.launch.serve import compressed_params, make_requests
 from repro.models.registry import get_model
 
@@ -73,12 +74,12 @@ def mla_series(slots: int = 2, requests: int = 6, max_new: int = 8,
     latent_bt = (m.kv_lora_rank + m.qk_rope_dim) * el * full.n_layers
     dense_bt = full.n_heads * (m.qk_nope_dim + m.qk_rope_dim
                                + m.v_dim) * el * full.n_layers
-    # not a timing: us_per_call stays 0 (the paged_attn traffic records'
-    # convention); the payload rides in the machine-readable extras
+    # not a timing (timed=False): the payload rides in the
+    # machine-readable extras
     emit("serve_mla_latent_bytes_per_token", 0.0,
          f"{latent_bt / 1024:.1f} KiB/token paged latent row, "
          f"deepseek-v2-236b geometry "
-         f"({dense_bt / latent_bt:.1f}x below dense KV)",
+         f"({dense_bt / latent_bt:.1f}x below dense KV)", timed=False,
          latent_bytes_per_token=float(latent_bt),
          dense_bytes_per_token=float(dense_bt),
          compression_vs_dense=dense_bt / latent_bt)
@@ -156,17 +157,34 @@ def seed_loop(cfg, params, prompts: List[np.ndarray], slots: int,
 
 
 def engine_run(cfg, params, prompts, slots, max_new, max_seq,
-               warmup: bool = True) -> dict:
-    def once():
+               warmup: bool = True, telemetry=None) -> dict:
+    def once(tel=None):
         eng = InferenceEngine(
             cfg, params, EngineConfig(num_slots=slots, max_seq=max_seq),
-            SamplingParams())
+            SamplingParams(), telemetry=tel)
         for p in prompts:
             eng.submit(p, max_new)
         return eng.run()["metrics"]
     if warmup:
         once()                           # compile prefill/decode once
-    return once()
+    return once(telemetry)
+
+
+def phase_breakdown_series(cfg, params, prompts, slots, max_new, max_seq):
+    """Where a post-warmup serve run spends its wall clock, by engine
+    phase span (telemetry tracer, DESIGN.md §10) — the Table-6-style
+    stage decomposition of the serve trajectory. Not a per-call timing
+    (timed=False): the payload is the per-phase totals."""
+    tel = Telemetry(trace=True)
+    m = engine_run(cfg, params, prompts, slots, max_new, max_seq,
+                   telemetry=tel)
+    totals = tel.tracer.phase_totals()
+    top = sorted(totals.items(), key=lambda kv: -kv[1]["ms"])[:3]
+    emit("serve_engine_phase_breakdown", 0.0,
+         "phase ms of a traced serve run: "
+         + ", ".join(f"{k} {v['ms']:.0f}ms" for k, v in top),
+         timed=False, tok_per_s=m["tok_per_s"],
+         **{f"{k}_ms": v["ms"] for k, v in totals.items()})
 
 
 def main(argv=None):
@@ -205,6 +223,9 @@ def main(argv=None):
              tok_per_s=eng["tok_per_s"], speedup_vs_seed=speedup,
              ttft_ms_p50=eng["ttft_ms_p50"],
              tpot_ms_p50=eng["tpot_ms_p50"])
+    # phase breakdown of the last compress config's serve run
+    phase_breakdown_series(cfg, params, prompts, args.slots,
+                           args.max_new, args.max_seq)
     decode_attention_series(cfg)
     mla_series(slots=args.slots, requests=args.requests,
                max_new=args.max_new, max_seq=args.max_seq, seed=args.seed)

@@ -28,7 +28,8 @@ from repro.core.model_compress import compress_draft, draft_layers
 from repro.core.pipeline import gqsa_compress
 from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
-from repro.engine import EngineConfig, InferenceEngine, SamplingParams
+from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
+                          Telemetry)
 
 try:
     from benchmarks.common import (calib_batches, emit, held_out_batches,
@@ -68,13 +69,13 @@ def bench_prompts(cfg, n, lens=(12, 20, 8, 16)):
 
 def make_runner(cfg, params, prompts, *, slots, max_new, max_seq, spec_k=0,
                 spec_fanout=None, draft=None, draft_layers=None):
-    def once():
+    def once(telemetry=None):
         eng = InferenceEngine(
             cfg, params,
             EngineConfig(num_slots=slots, max_seq=max_seq, spec_k=spec_k,
                          spec_fanout=spec_fanout,
                          spec_draft_layers=draft_layers),
-            SamplingParams(), draft_params=draft)
+            SamplingParams(), draft_params=draft, telemetry=telemetry)
         for p in prompts:
             eng.submit(p, max_new)
         out = eng.run()
@@ -164,6 +165,25 @@ def main(argv=None):
           + ", ".join(f"{p}={s:.2f}x" for p, s in speedups.items()))
     print(f"# default profile {DEFAULT_DRAFT_PROFILE}: {default:.2f}x "
           f"(bar: >= 1.5x)")
+
+    # where a speculative round spends its wall clock (telemetry phase
+    # spans, DESIGN.md §10): one traced post-warmup pass of the default
+    # profile. draft/verify spans are dispatch-side, the segment's sync
+    # span holds the blocked device time — together the Table-6-style
+    # stage decomposition. Not a per-call timing (timed=False).
+    tel = Telemetry(trace=True)
+    mphase, _ = runners[DEFAULT_DRAFT_PROFILE](tel)
+    totals = tel.tracer.phase_totals()
+    emit("spec_decode_phase_breakdown", 0.0,
+         f"phase ms of a traced K={args.spec_k} "
+         f"{DEFAULT_DRAFT_PROFILE} run: "
+         + ", ".join(f"{k} {v['ms']:.0f}ms"
+                     for k, v in sorted(totals.items(),
+                                        key=lambda kv: -kv[1]["ms"])[:4]),
+         timed=False, spec_k=args.spec_k,
+         draft_profile=DEFAULT_DRAFT_PROFILE,
+         acceptance_rate=mphase["acceptance_rate"],
+         **{f"{k}_ms": v["ms"] for k, v in totals.items()})
 
     tree_results = tree_sweep(cfg, fp_params, target, prompts, args,
                               base_out)

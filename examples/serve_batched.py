@@ -8,6 +8,16 @@ verify keeps the output token-for-token identical to plain GQSA serving).
     PYTHONPATH=src python examples/serve_batched.py [--spec 4]
     PYTHONPATH=src python examples/serve_batched.py --spec 4 \
         --draft-profile w4s75
+
+Observability (DESIGN.md §10): pass ``--trace out.json`` to any
+``repro.launch.serve`` run to export a Chrome trace of the engine's
+phase spans (prefill / decode_segment / draft / verify / sync / evict)
+with per-request flow arrows — load it at https://ui.perfetto.dev —
+and ``--stats-interval 2`` to print a one-line [stats] snapshot (queue
+depth, free KV pages, spec acceptance/ladder) every 2 seconds:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 8 --spec 4 \
+        --trace /tmp/serve_trace.json --stats-interval 2
 """
 import argparse
 

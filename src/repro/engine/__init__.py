@@ -13,7 +13,10 @@ from repro.engine.kv_cache import PageAllocator, PagedKVCache
 from repro.engine.metrics import EngineMetrics
 from repro.engine.sampling import SamplingParams, sample, spec_verify
 from repro.engine.scheduler import Request, Scheduler
+from repro.engine.telemetry import (MetricsRegistry, SpanTracer,
+                                    StreamingHistogram, Telemetry)
 
 __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "PagedKVCache", "EngineMetrics", "SamplingParams", "sample",
-           "spec_verify", "Request", "Scheduler"]
+           "spec_verify", "Request", "Scheduler", "Telemetry",
+           "MetricsRegistry", "SpanTracer", "StreamingHistogram"]

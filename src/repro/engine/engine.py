@@ -35,6 +35,7 @@ from repro.engine.kv_cache import PagedKVCache
 from repro.engine.metrics import EngineMetrics
 from repro.engine.sampling import SamplingParams, sample
 from repro.engine.scheduler import DECODE, Request, Scheduler
+from repro.engine.telemetry import Telemetry
 from repro.models.registry import get_model
 
 
@@ -80,21 +81,27 @@ def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
     must not recompile (both keys are frozen dataclasses)."""
     api = get_model(cfg)
 
+    # jax.named_scope: trace-time-only phase names so device profiler
+    # traces line up with the host spans (telemetry, DESIGN.md §10) —
+    # no runtime cost once compiled
     def prefill_fn(params, cache, tokens, lengths, block_tables, rng):
-        logits, cache = api.prefill(params, cache, tokens, lengths,
-                                    block_tables, cfg, None, use_pallas)
-        rng, sub = jax.random.split(rng)
-        first = sample(logits[:, -1, :], sub, sampling)
+        with jax.named_scope("engine_prefill"):
+            logits, cache = api.prefill(params, cache, tokens, lengths,
+                                        block_tables, cfg, None, use_pallas)
+            rng, sub = jax.random.split(rng)
+            first = sample(logits[:, -1, :], sub, sampling)
         return first, cache, rng
 
     def decode_fn(params, cache, tokens, positions, block_tables,
                   active, rng, max_live):
-        logits, cache = api.decode_step(params, cache, tokens[:, None],
-                                        positions, cfg, None, use_pallas,
-                                        block_tables=block_tables,
-                                        max_live_pages=max_live)
-        rng, sub = jax.random.split(rng)
-        nxt = sample(logits[:, -1, :], sub, sampling)
+        with jax.named_scope("engine_decode"):
+            logits, cache = api.decode_step(params, cache, tokens[:, None],
+                                            positions, cfg, None, use_pallas,
+                                            block_tables=block_tables,
+                                            max_live_pages=max_live)
+            rng, sub = jax.random.split(rng)
+            with jax.named_scope("engine_sample"):
+                nxt = sample(logits[:, -1, :], sub, sampling)
         return nxt, positions + active, cache, rng
 
     # max_live is static: it clamps the block tables to the batch's max
@@ -115,7 +122,7 @@ class InferenceEngine:
 
     def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
                  sampling: SamplingParams = SamplingParams(),
-                 draft_params=None):
+                 draft_params=None, telemetry: Optional[Telemetry] = None):
         api = get_model(cfg)
         if not api.supports_paged_cache:
             from repro.models.registry import paged_families
@@ -154,13 +161,22 @@ class InferenceEngine:
             self._spec_width = engine_cfg.spec_k + 1
         self._accept_ewma = np.full((engine_cfg.num_slots,),
                                     self.SPEC_EWMA_INIT)
+        # observability (DESIGN.md §10): one registry shared by the KV
+        # cache, scheduler, spec ladder and metrics; tracing is off by
+        # default and never changes the dispatch/sync structure
+        self.tel = telemetry if telemetry is not None else Telemetry()
+        reg = self.tel.registry
+        self._c_retraces = reg.counter("jit.decode_retraces")
+        self._c_ladder_flips = reg.counter("spec.ladder_transitions")
+        self._g_ladder = reg.gauge("spec.ladder_rung")
+        self._ladder_rung: Optional[int] = None
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
                                engine_cfg.num_pages,
-                               lookahead=lookahead)
+                               lookahead=lookahead, registry=reg)
         self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
-                                   engine_cfg.max_seq)
-        self.metrics = EngineMetrics()
+                                   engine_cfg.max_seq, registry=reg)
+        self.metrics = EngineMetrics(registry=reg, tracer=self.tel.tracer)
         self._rng = jax.random.PRNGKey(engine_cfg.seed)
         b = engine_cfg.num_slots
         self._tokens = jnp.zeros((b,), jnp.int32)      # device-side feedback
@@ -191,9 +207,13 @@ class InferenceEngine:
         """Serve until the queue and all slots drain. Returns
         {"results": [...], "metrics": {...}} (results in completion order)."""
         sch = self.scheduler
+        tracer = self.tel.tracer
         self.metrics.run_started()
         while sch.has_work():
-            admitted = sch.admit()
+            with tracer.span("admit") as sp:
+                admitted = sch.admit()
+                sp.set(admitted=len(admitted),
+                       queue_depth=len(sch.waiting))
             if admitted:
                 self._do_prefill(admitted)
             actives = [r for r in sch.active() if r.state == DECODE]
@@ -210,13 +230,16 @@ class InferenceEngine:
             else:
                 finished = self._decode_segment(actives)
             t = self.metrics.now()
-            for r in finished:
-                self.metrics.record_finish(r.rid, t, r.produced)
-                sch.finish(r)
-                # an evicted slot's acceptance history dies with it
-                self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
-            if finished:
-                self._sync_slot_state()
+            with tracer.span("evict") as sp:
+                for r in finished:
+                    self.metrics.record_finish(r.rid, t, r.produced)
+                    sch.finish(r)
+                    # an evicted slot's acceptance history dies with it
+                    self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
+                if finished:
+                    self._sync_slot_state()
+                sp.set(evicted=len(finished))
+            self.tel.maybe_stats(self.metrics)
         self.metrics.run_finished()
         return {"results": self._materialize(), "metrics":
                 self.metrics.summary()}
@@ -225,20 +248,31 @@ class InferenceEngine:
         """Plain decode segment: no slot can exceed its budget before the
         earliest one finishes, so no host sync inside the segment."""
         sch = self.scheduler
+        tracer = self.tel.tracer
         t0 = self.metrics.now()
         seg = max(1, min(r.remaining for r in actives))
         finished: List[Request] = []
-        for _ in range(seg):
-            self._tokens, self._positions, self.kv.data, self._rng = \
-                self._decode_fn(self.params, self.kv.data, self._tokens,
-                                self._positions, self._block_tables,
-                                self._active, self._rng, self._max_live)
-            idx = len(self._token_log)
-            self._token_log.append(self._tokens)
-            for r in sch.active():
-                r.log_entries.append(idx)
-            finished.extend(sch.step_decoded())
-        jax.block_until_ready(self._tokens)            # segment boundary
+        with tracer.span("decode_segment") as seg_sp:
+            with tracer.annotate("decode_segment"):
+                for _ in range(seg):
+                    self._tokens, self._positions, self.kv.data, \
+                        self._rng = self._decode_fn(
+                            self.params, self.kv.data, self._tokens,
+                            self._positions, self._block_tables,
+                            self._active, self._rng, self._max_live)
+                    idx = len(self._token_log)
+                    self._token_log.append(self._tokens)
+                    for r in sch.active():
+                        r.log_entries.append(idx)
+                    finished.extend(sch.step_decoded())
+            with tracer.span("sync", cat="sync"):
+                jax.block_until_ready(self._tokens)    # segment boundary
+            seg_sp.set(steps=seg, slots=len(actives),
+                       tokens=seg * len(actives))
+            if tracer.enabled:
+                for r in actives:
+                    tracer.flow_point(r.rid, "decode_segment",
+                                      t=seg_sp.t0)
         self.metrics.decode_steps += seg
         self.metrics.record_decode_segment(self.metrics.now() - t0,
                                            seg * len(actives))
@@ -256,6 +290,7 @@ class InferenceEngine:
         step pairs are memoized per fanout, so profile flips never
         recompile)."""
         sch = self.scheduler
+        tracer = self.tel.tracer
         t0 = self.metrics.now()
         if self._spec_tree:
             from repro.engine.spec import tree_step_fns
@@ -272,31 +307,47 @@ class InferenceEngine:
             draft_dispatches = 1                  # one fused K-step call
         rounds = max(1, -(-min(r.remaining for r in actives) // (k + 1)))
         round_idxs: List[int] = []
-        for _ in range(rounds):
-            draft = draft_fn(
-                self.draft_params, self.kv.data, self._tokens,
-                self._positions, self._block_tables, self._max_live)
-            (out, n_new, self._tokens, self._positions, self._remaining,
-             self.kv.data, self._rng) = verify_fn(
-                self.params, self.kv.data, self._tokens, draft,
-                self._positions, self._block_tables, self._active,
-                self._remaining, self._rng, self._max_live)
-            idx = self._log_spec(out, n_new)
-            round_idxs.append(idx)
-            for r in sch.active():
-                r.log_entries.append(idx)
-        jax.block_until_ready(self._tokens)            # segment boundary
-        seg_tokens = 0
-        for idx in round_idxs:                         # replay the rounds
-            n_new_h = np.asarray(self._spec_log[idx][1])
-            proposed, accepted = sch.step_spec_round(n_new_h, k)
-            slot_rounds = int((n_new_h > 0).sum())
-            self.metrics.record_spec_round(
-                proposed, accepted, slot_rounds=slot_rounds,
-                verify_tokens=width * slot_rounds)
-            if self.ecfg.spec_adaptive:
-                self._update_accept_ewma(n_new_h, k)
-            seg_tokens += int(n_new_h.sum())
+        with tracer.span("spec_segment") as seg_sp:
+            for _ in range(rounds):
+                # per-round spans are dispatch-only (cat "dispatch"): the
+                # segment stays sync-free, so they time async enqueue,
+                # not device work — the device side comes from the
+                # profiler annotations / named scopes
+                with tracer.span("draft", cat="dispatch"), \
+                        tracer.annotate("draft"):
+                    draft = draft_fn(
+                        self.draft_params, self.kv.data, self._tokens,
+                        self._positions, self._block_tables,
+                        self._max_live)
+                with tracer.span("verify", cat="dispatch"), \
+                        tracer.annotate("verify"):
+                    (out, n_new, self._tokens, self._positions,
+                     self._remaining, self.kv.data, self._rng) = verify_fn(
+                        self.params, self.kv.data, self._tokens, draft,
+                        self._positions, self._block_tables, self._active,
+                        self._remaining, self._rng, self._max_live)
+                idx = self._log_spec(out, n_new)
+                round_idxs.append(idx)
+                for r in sch.active():
+                    r.log_entries.append(idx)
+            with tracer.span("sync", cat="sync"):
+                jax.block_until_ready(self._tokens)    # segment boundary
+            seg_tokens = 0
+            for idx in round_idxs:                     # replay the rounds
+                n_new_h = np.asarray(self._spec_log[idx][1])
+                proposed, accepted = sch.step_spec_round(n_new_h, k)
+                slot_rounds = int((n_new_h > 0).sum())
+                self.metrics.record_spec_round(
+                    proposed, accepted, slot_rounds=slot_rounds,
+                    verify_tokens=width * slot_rounds)
+                if self.ecfg.spec_adaptive:
+                    self._update_accept_ewma(n_new_h, k)
+                seg_tokens += int(n_new_h.sum())
+            seg_sp.set(rounds=rounds, k=k, slots=len(actives),
+                       tokens=seg_tokens)
+            if tracer.enabled:
+                for r in actives:
+                    tracer.flow_point(r.rid, "spec_segment", t=seg_sp.t0)
         # draft dispatches + verify dispatches (for dispatch accounting;
         # spec_rounds tracks rounds)
         self.metrics.decode_steps += (draft_dispatches + 1) * rounds
@@ -311,20 +362,34 @@ class InferenceEngine:
         jitted program per segment, so per-slot budgets resolve at
         segment granularity)."""
         if len(self._fanout_ladder) == 1:
-            return self._fanout_ladder[0]
+            return self._pick_rung(0)
         act = [i for i, s in enumerate(self.scheduler.slots)
                if s.request is not None and s.request.state == DECODE]
         a = min(self._accept_ewma[i] for i in act) if act else 1.0
         if a < self.SPEC_EWMA_LOW:
-            return self._fanout_ladder[0]
+            return self._pick_rung(0)
         if a >= self.SPEC_EWMA_HIGH:
-            return self._fanout_ladder[2]
-        return self._fanout_ladder[1]
+            return self._pick_rung(2)
+        return self._pick_rung(1)
+
+    def _pick_rung(self, idx: int) -> Tuple[int, ...]:
+        """Publish the chosen ladder rung: transition counter + gauge +
+        a trace instant marking the segment where the tree reshaped."""
+        if idx != self._ladder_rung:
+            if self._ladder_rung is not None:
+                self._c_ladder_flips.inc()
+            self._ladder_rung = idx
+            self.tel.tracer.instant(
+                "spec_ladder", rung=idx,
+                fanout=str(self._fanout_ladder[idx]))
+        self._g_ladder.set(idx)
+        return self._fanout_ladder[idx]
 
     def _update_accept_ewma(self, n_new: np.ndarray, k: int) -> None:
         """Fold one round's per-slot acceptance fraction ((n_new - 1)/K,
         the budget-clamp tail reads as rejection — acceptable noise for a
         control signal) into the per-slot EWMAs."""
+        reg = self.tel.registry
         for i in range(self.ecfg.num_slots):
             if n_new[i] > 0:
                 rate = min(max((float(n_new[i]) - 1.0) / max(k, 1), 0.0),
@@ -332,11 +397,14 @@ class InferenceEngine:
                 self._accept_ewma[i] = (self.SPEC_EWMA_BETA
                                         * self._accept_ewma[i]
                                         + (1 - self.SPEC_EWMA_BETA) * rate)
+                reg.gauge(f"spec.accept_ewma.slot{i}").set(
+                    float(self._accept_ewma[i]))
 
     # -- internals ----------------------------------------------------------
 
     def _do_prefill(self, admitted: List[Request]) -> None:
         b = self.ecfg.num_slots
+        tracer = self.tel.tracer
         # cap the pow2 bucket at max_seq: prompt_len <= max_seq is enforced
         # at submit, and wider buckets are pure waste (FLOPs + a compile)
         s = min(_bucket(max(r.prompt_len for r in admitted),
@@ -353,10 +421,17 @@ class InferenceEngine:
             lengths[r.slot] = r.prompt_len
             bt[r.slot] = self.kv.block_tables[r.slot]
             mask[r.slot] = True
-        first, self.kv.data, self._rng = self._prefill_fn(
-            self.params, self.kv.data, jnp.asarray(tokens),
-            jnp.asarray(lengths), jnp.asarray(bt), self._rng)
-        jax.block_until_ready(first)
+        with tracer.span("prefill") as sp, tracer.annotate("prefill"):
+            first, self.kv.data, self._rng = self._prefill_fn(
+                self.params, self.kv.data, jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(bt), self._rng)
+            jax.block_until_ready(first)
+            sp.set(admitted=len(admitted), bucket=s,
+                   tokens=len(admitted),
+                   prompt_tokens=int(lengths.sum()))
+            if tracer.enabled:
+                for r in admitted:
+                    tracer.flow_point(r.rid, "prefill", t=sp.t0)
         t = self.metrics.now()
         if self.spec:
             idx = self._log_spec(first[:, None],
@@ -399,8 +474,15 @@ class InferenceEngine:
         # batch's max occupied page count, pow2-bucketed so the jitted
         # steps retrace at most log2(max_pages_per_slot) times
         occ = int((self.kv.block_tables != self.kv.sentinel).sum(1).max())
-        self._max_live = min(_bucket(max(occ, 1), 1),
-                             self.kv.max_pages_per_slot)
+        new_max_live = min(_bucket(max(occ, 1), 1),
+                           self.kv.max_pages_per_slot)
+        if new_max_live != self._max_live:
+            # max_live is a static jit arg: every change retraces the
+            # decode/draft/verify steps (pow2-bucketed, so bounded by
+            # log2(max_pages_per_slot) over an engine lifetime)
+            self._c_retraces.inc()
+            self.tel.tracer.instant("jit_retrace", max_live=new_max_live)
+        self._max_live = new_max_live
         act = np.zeros((self.ecfg.num_slots,), np.int32)
         rem = np.zeros((self.ecfg.num_slots,), np.int32)
         for i, slot in enumerate(self.scheduler.slots):

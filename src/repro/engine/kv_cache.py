@@ -17,6 +17,8 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.telemetry import MetricsRegistry
+
 
 class PageAllocator:
     """Free-list page allocator. O(1) alloc/free, pages are reused LIFO so
@@ -53,7 +55,8 @@ class PagedKVCache:
 
     def __init__(self, cfg, api, num_slots: int, max_seq: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 lookahead: int = 0):
+                 lookahead: int = 0,
+                 registry: Optional[MetricsRegistry] = None):
         if not api.supports_paged_cache:
             from repro.models.registry import paged_families
             raise NotImplementedError(
@@ -82,6 +85,21 @@ class PagedKVCache:
         self.block_tables = np.full((num_slots, self.max_pages_per_slot),
                                     self.sentinel, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        # pool occupancy + free-list depth into the shared registry
+        # (telemetry, DESIGN.md §10): the admission-backpressure signals
+        # the chunked-prefill scheduler direction reads online
+        reg = registry if registry is not None else MetricsRegistry()
+        self._g_free = reg.gauge("kv.pages_free")
+        self._g_occ = reg.gauge("kv.occupancy")
+        self._c_allocs = reg.counter("kv.page_allocs")
+        self._c_frees = reg.counter("kv.page_frees")
+        reg.gauge("kv.num_pages").set(self.num_pages)
+        self._sync_gauges()
+
+    def _sync_gauges(self) -> None:
+        free = self.allocator.num_free
+        self._g_free.set(free)
+        self._g_occ.set(1.0 - free / max(self.num_pages, 1))
 
     def pages_needed(self, n_tokens: int) -> int:
         """Worst-case pages for a request: prompt + budget + the
@@ -99,11 +117,15 @@ class PagedKVCache:
         self._slot_pages[slot] = pages
         self.block_tables[slot, :] = self.sentinel
         self.block_tables[slot, :len(pages)] = pages
+        self._c_allocs.inc(len(pages))
+        self._sync_gauges()
 
     def release(self, slot: int) -> None:
+        self._c_frees.inc(len(self._slot_pages[slot]))
         self.allocator.free(self._slot_pages[slot])
         self._slot_pages[slot] = []
         self.block_tables[slot, :] = self.sentinel
+        self._sync_gauges()
 
     def device_block_tables(self) -> jnp.ndarray:
         return jnp.asarray(self.block_tables)

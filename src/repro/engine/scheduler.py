@@ -23,6 +23,7 @@ from typing import Deque, List, Optional
 import numpy as np
 
 from repro.engine.kv_cache import PagedKVCache
+from repro.engine.telemetry import MetricsRegistry
 
 QUEUED, PREFILL, DECODE, FINISHED = "queued", "prefill", "decode", "finished"
 
@@ -73,7 +74,8 @@ class Slot:
 
 
 class Scheduler:
-    def __init__(self, num_slots: int, kv: PagedKVCache, max_seq: int):
+    def __init__(self, num_slots: int, kv: PagedKVCache, max_seq: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.kv = kv
         self.max_seq = max_seq
         self.slots: List[Slot] = [Slot() for _ in range(num_slots)]
@@ -81,6 +83,18 @@ class Scheduler:
         self._ids = itertools.count()
         self.admission_order: List[int] = []   # rids, in service order
         self.finished: List[Request] = []
+        # queue depth / admissions / evictions into the shared registry
+        # (telemetry, DESIGN.md §10)
+        reg = registry if registry is not None else MetricsRegistry()
+        self._g_queue = reg.gauge("sched.queue_depth")
+        self._g_active = reg.gauge("sched.active_slots")
+        self._c_submitted = reg.counter("sched.submitted")
+        self._c_admissions = reg.counter("sched.admissions")
+        self._c_evictions = reg.counter("sched.evictions")
+
+    def _sync_gauges(self) -> None:
+        self._g_queue.set(len(self.waiting))
+        self._g_active.set(sum(not s.free for s in self.slots))
 
     # -- queue side ---------------------------------------------------------
 
@@ -93,6 +107,8 @@ class Scheduler:
                 f"request {req.rid}: prompt+budget {req.total_tokens} "
                 f"exceeds max_seq {self.max_seq}")
         self.waiting.append(req)               # FIFO: append at the tail...
+        self._c_submitted.inc()
+        self._sync_gauges()
         return req.rid
 
     def has_work(self) -> bool:
@@ -122,6 +138,9 @@ class Scheduler:
             self.slots[slot].position = head.prompt_len
             self.admission_order.append(head.rid)
             admitted.append(head)
+        if admitted:
+            self._c_admissions.inc(len(admitted))
+        self._sync_gauges()
         return admitted
 
     def active(self) -> List[Request]:
@@ -187,3 +206,5 @@ class Scheduler:
         self.slots[slot].position = 0
         req.state = FINISHED
         self.finished.append(req)
+        self._c_evictions.inc()
+        self._sync_gauges()

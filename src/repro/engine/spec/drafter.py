@@ -54,18 +54,22 @@ def build_draft_fn(cfg, api, use_pallas: bool, k: int,
 
     def draft_fn(draft_params, cache, tokens, positions, block_tables,
                  max_live=None):
-        dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
-            if dl != cfg.n_layers else cache
-        toks = tokens
-        drafts = []
-        for j in range(k):
-            logits, dcache = api.decode_step(
-                draft_params, dcache, toks[:, None], positions + j, dcfg,
-                None, use_pallas, block_tables=block_tables,
-                max_live_pages=max_live)
-            toks = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            drafts.append(toks)
-        return jnp.stack(drafts, axis=1)
+        # trace-time-only phase name for device profiler alignment
+        # (telemetry, DESIGN.md §10)
+        with jax.named_scope("spec_draft"):
+            dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
+                if dl != cfg.n_layers else cache
+            toks = tokens
+            drafts = []
+            for j in range(k):
+                logits, dcache = api.decode_step(
+                    draft_params, dcache, toks[:, None], positions + j,
+                    dcfg, None, use_pallas, block_tables=block_tables,
+                    max_live_pages=max_live)
+                toks = jnp.argmax(logits[:, -1, :],
+                                  axis=-1).astype(jnp.int32)
+                drafts.append(toks)
+            return jnp.stack(drafts, axis=1)
 
     return draft_fn
 

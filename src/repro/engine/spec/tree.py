@@ -142,26 +142,29 @@ def build_tree_draft_fn(cfg, api, use_pallas: bool, tpl: TreeTemplate,
 
     def draft_fn(draft_params, cache, tokens, positions, block_tables,
                  max_live=None):
-        dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
-            if dl != cfg.n_layers else cache
-        logits, dcache = api.decode_step(
-            draft_params, dcache, tokens[:, None], positions, dcfg,
-            None, use_pallas, block_tables=block_tables,
-            max_live_pages=max_live)
-        levels = []
-        for lvl, f in enumerate(tpl.fanout):
-            _, top = jax.lax.top_k(logits, f)       # [B, n_prev, f]
-            toks = top.reshape(top.shape[0], -1).astype(jnp.int32)
-            levels.append(toks)                     # level lvl+1 tokens
-            if lvl + 1 == tpl.depth:
-                break
-            spec = tpl.level_tree(lvl + 1)
+        # trace-time-only phase name for device profiler alignment
+        # (telemetry, DESIGN.md §10)
+        with jax.named_scope("spec_tree_draft"):
+            dcache = jax.tree_util.tree_map(lambda c: c[:dl], cache) \
+                if dl != cfg.n_layers else cache
             logits, dcache = api.decode_step(
-                draft_params, dcache, toks,
-                positions + spec["start"], dcfg, None, use_pallas,
-                block_tables=block_tables, max_live_pages=max_live,
-                tree=spec)
-        return jnp.concatenate(levels, axis=1)
+                draft_params, dcache, tokens[:, None], positions, dcfg,
+                None, use_pallas, block_tables=block_tables,
+                max_live_pages=max_live)
+            levels = []
+            for lvl, f in enumerate(tpl.fanout):
+                _, top = jax.lax.top_k(logits, f)   # [B, n_prev, f]
+                toks = top.reshape(top.shape[0], -1).astype(jnp.int32)
+                levels.append(toks)                 # level lvl+1 tokens
+                if lvl + 1 == tpl.depth:
+                    break
+                spec = tpl.level_tree(lvl + 1)
+                logits, dcache = api.decode_step(
+                    draft_params, dcache, toks,
+                    positions + spec["start"], dcfg, None, use_pallas,
+                    block_tables=block_tables, max_live_pages=max_live,
+                    tree=spec)
+            return jnp.concatenate(levels, axis=1)
 
     return draft_fn
 
@@ -215,25 +218,30 @@ def build_tree_verify_fn(cfg, api, sampling: SamplingParams,
 
     def verify_fn(params, cache, tokens, tree_tokens, positions,
                   block_tables, active, remaining, rng, max_live=None):
-        feed = jnp.concatenate([tokens[:, None], tree_tokens], axis=1)
-        logits, cache = api.decode_step(
-            params, cache, feed, positions, cfg, None, use_pallas,
-            block_tables=block_tables, max_live_pages=max_live,
-            tree=tpl.verify_tree())
-        rng, sub = jax.random.split(rng)
-        n_acc, out, path = tree_verify(logits, feed, tpl.fanout,
-                                       tpl.child_start, sub, sampling)
-        n_new = jnp.minimum(n_acc + 1, remaining) * active      # [B]
-        nxt = jnp.take_along_axis(
-            out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
-        tokens = jnp.where(n_new > 0, nxt, tokens)
-        # leaves are [L, P, ps, ...] for every paged layout (K/V pools or
-        # the MLA latent pool) — compaction is the same block-table move
-        page_size = jax.tree_util.tree_leaves(cache)[0].shape[2]
-        cache = compact_accepted(cache, block_tables, positions, path,
-                                 n_new, page_size)
-        positions = positions + n_new
-        remaining = remaining - n_new
+        # trace-time-only phase names for device profiler alignment
+        # (telemetry, DESIGN.md §10)
+        with jax.named_scope("spec_tree_verify"):
+            feed = jnp.concatenate([tokens[:, None], tree_tokens], axis=1)
+            logits, cache = api.decode_step(
+                params, cache, feed, positions, cfg, None, use_pallas,
+                block_tables=block_tables, max_live_pages=max_live,
+                tree=tpl.verify_tree())
+            rng, sub = jax.random.split(rng)
+            n_acc, out, path = tree_verify(logits, feed, tpl.fanout,
+                                           tpl.child_start, sub, sampling)
+            n_new = jnp.minimum(n_acc + 1, remaining) * active  # [B]
+            nxt = jnp.take_along_axis(
+                out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
+            tokens = jnp.where(n_new > 0, nxt, tokens)
+            # leaves are [L, P, ps, ...] for every paged layout (K/V
+            # pools or the MLA latent pool) — compaction is the same
+            # block-table move
+            page_size = jax.tree_util.tree_leaves(cache)[0].shape[2]
+            with jax.named_scope("tree_compact"):
+                cache = compact_accepted(cache, block_tables, positions,
+                                         path, n_new, page_size)
+            positions = positions + n_new
+            remaining = remaining - n_new
         return out, n_new, tokens, positions, remaining, cache, rng
 
     return verify_fn

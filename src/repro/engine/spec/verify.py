@@ -40,20 +40,23 @@ def build_verify_fn(cfg, api, sampling: SamplingParams, use_pallas: bool,
 
     def verify_fn(params, cache, tokens, draft_tokens, positions,
                   block_tables, active, remaining, rng, max_live=None):
-        feed = jnp.concatenate([tokens[:, None], draft_tokens], axis=1)
-        logits, cache = api.decode_step(
-            params, cache, feed, positions, cfg, None, use_pallas,
-            block_tables=block_tables, max_live_pages=max_live)
-        rng, sub = jax.random.split(rng)
-        n_acc, out = spec_verify(logits, draft_tokens, sub, sampling)
-        n_new = jnp.minimum(n_acc + 1, remaining) * active      # [B]
-        # the round's last produced token is the next step's feed; slots
-        # that produced nothing keep their pending token
-        nxt = jnp.take_along_axis(
-            out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
-        tokens = jnp.where(n_new > 0, nxt, tokens)
-        positions = positions + n_new                # rejected suffix: rewind
-        remaining = remaining - n_new
+        # trace-time-only phase name for device profiler alignment
+        # (telemetry, DESIGN.md §10)
+        with jax.named_scope("spec_verify"):
+            feed = jnp.concatenate([tokens[:, None], draft_tokens], axis=1)
+            logits, cache = api.decode_step(
+                params, cache, feed, positions, cfg, None, use_pallas,
+                block_tables=block_tables, max_live_pages=max_live)
+            rng, sub = jax.random.split(rng)
+            n_acc, out = spec_verify(logits, draft_tokens, sub, sampling)
+            n_new = jnp.minimum(n_acc + 1, remaining) * active  # [B]
+            # the round's last produced token is the next step's feed;
+            # slots that produced nothing keep their pending token
+            nxt = jnp.take_along_axis(
+                out, jnp.maximum(n_new - 1, 0)[:, None], axis=1)[:, 0]
+            tokens = jnp.where(n_new > 0, nxt, tokens)
+            positions = positions + n_new        # rejected suffix: rewind
+            remaining = remaining - n_new
         return out, n_new, tokens, positions, remaining, cache, rng
 
     return verify_fn

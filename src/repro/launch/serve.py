@@ -24,7 +24,8 @@ from repro.core.model_compress import (compress_draft, compress_params,
                                        compress_params_w4, draft_layers)
 from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
-from repro.engine import EngineConfig, InferenceEngine, SamplingParams
+from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
+                          Telemetry)
 from repro.models.registry import get_model
 
 
@@ -55,7 +56,12 @@ def compressed_params(cfg, args, rng, fp_params=None):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2_7b")
-    ap.add_argument("--reduced", action="store_true")
+    # reduced is the default: this CLI's job is exercising the serving
+    # stack, which the reduced configs do at a fraction of the cost
+    # (--full restores full-scale params for real measurements)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="full-scale params (default: reduced config)")
     ap.add_argument("--compress", default="gqsa",
                     choices=["none", "w4", "gqsa"])
     ap.add_argument("--sparsity", type=float, default=0.5)
@@ -93,6 +99,15 @@ def main(argv=None):
                          "kernel (attends in place on the KV pool; the "
                          "jnp reference gathers pages densely)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record phase spans + per-request flow events "
+                         "and export Chrome trace-event JSON (load at "
+                         "ui.perfetto.dev); also prints the phase "
+                         "breakdown after the run")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    metavar="SEC",
+                    help="print a one-line engine stats snapshot every "
+                         "SEC seconds of serving (0 = off)")
     args = ap.parse_args(argv)
 
     spec_fanout = None
@@ -134,6 +149,8 @@ def main(argv=None):
                   + (" (adaptive)" if args.spec_adaptive else ""))
         fp_params = None                 # free the FP tree before serving
 
+    telemetry = Telemetry(trace=args.trace is not None,
+                          stats_interval_s=args.stats_interval)
     engine = InferenceEngine(
         cfg, params,
         EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
@@ -144,7 +161,7 @@ def main(argv=None):
                      spec_adaptive=args.spec_adaptive),
         SamplingParams(temperature=args.temperature, top_k=args.top_k,
                        top_p=args.top_p),
-        draft_params=draft_params)
+        draft_params=draft_params, telemetry=telemetry)
 
     nprng = np.random.default_rng(args.seed)
     # prompts must leave room for the generation budget within max_seq
@@ -163,6 +180,13 @@ def main(argv=None):
     m = out["metrics"]
     print(engine.metrics.format_summary()
           + f" ({args.slots} slots, {m['decode_steps']} decode steps)")
+    if args.trace is not None:
+        path = telemetry.tracer.export(args.trace)
+        totals = telemetry.tracer.phase_totals()
+        print(f"wrote trace ({len(telemetry.tracer.events)} events) -> "
+              f"{path} (load at ui.perfetto.dev)")
+        for name, d in sorted(totals.items(), key=lambda kv: -kv[1]["ms"]):
+            print(f"  {name:16s} {d['ms']:9.2f}ms  x{d['count']}")
     # legacy result keys (kept stable for tests + examples)
     return dict(m, requests=int(m["requests"]), tokens=int(m["tokens"]),
                 results=out["results"])

@@ -1,0 +1,354 @@
+"""Engine observability layer (DESIGN.md §10): span tracer + Chrome
+trace export, per-request flow events, streaming-histogram quantile
+bounds, registry wiring, zero-overhead-when-off (no extra device syncs).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # pragma: no cover
+    from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.engine import (EngineConfig, InferenceEngine, MetricsRegistry,
+                          SpanTracer, StreamingHistogram, Telemetry)
+from repro.engine.telemetry import NULL_SPAN, TID_ENGINE
+from repro.models.registry import get_model
+
+S = settings(max_examples=30, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, api, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
+
+
+def _run(cfg, params, tel, *, n_req=4, max_new=6, slots=2, max_seq=32,
+         spec_k=0, draft=None, dlayers=None):
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=slots, max_seq=max_seq, spec_k=spec_k,
+                     spec_draft_layers=dlayers),
+        draft_params=draft, telemetry=tel)
+    for p in _prompts(cfg.vocab, tuple(4 + i % 3 for i in range(n_req))):
+        eng.submit(p, max_new)
+    return eng, eng.run()
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create():
+    reg = MetricsRegistry()
+    c = reg.counter("a.b")
+    c.inc()
+    c.inc(3)
+    assert reg.counter("a.b") is c and c.value == 4
+    g = reg.gauge("g")
+    g.set(2)
+    assert reg.gauge("g") is g and g.value == 2.0
+    h = reg.histogram("h")
+    h.record(5.0)
+    assert reg.histogram("h") is h and h.count == 1
+    snap = reg.snapshot()
+    assert snap["a.b"] == 4 and snap["g"] == 2.0
+    assert snap["h.count"] == 1 and snap["h.p50"] == 5.0
+
+
+def test_histogram_empty_and_single():
+    h = StreamingHistogram()
+    assert np.isnan(h.quantile(50)) and np.isnan(h.mean)
+    h.record(7.25)
+    # single sample: every quantile is that sample, exactly (clamped to
+    # [min, max])
+    for q in (0, 50, 99, 100):
+        assert h.quantile(q) == 7.25
+    assert h.mean == 7.25
+
+
+def test_histogram_zero_bucket_exact():
+    h = StreamingHistogram()
+    for _ in range(10):
+        h.record(0.0)
+    h.record(100.0)
+    assert h.quantile(50) == 0.0
+    assert h.quantile(100) == 100.0
+
+
+def test_histogram_monotone_in_q():
+    h = StreamingHistogram()
+    xs = np.random.default_rng(1).uniform(0.01, 1e4, 300)
+    for v in xs:
+        h.record(v)
+    qs = [h.quantile(q) for q in range(0, 101, 5)]
+    assert all(a <= b + 1e-12 for a, b in zip(qs, qs[1:]))
+
+
+def _check_quantile_bound(xs, qs):
+    h = StreamingHistogram()
+    for v in xs:
+        h.record(v)
+    for q in qs:
+        exact = float(np.percentile(xs, q, method="lower"))
+        got = h.quantile(q)
+        if exact == 0.0:
+            assert got == 0.0
+        else:
+            assert abs(got - exact) / exact <= h.rel_error_bound, (
+                f"q={q}: {got} vs exact {exact} "
+                f"(bound {h.rel_error_bound})")
+
+
+def test_histogram_quantile_bound_grid():
+    """Deterministic version of the property test (runs even without
+    hypothesis): quantiles stay within rel_error_bound of the exact
+    order statistic across distributions spanning decades."""
+    rng = np.random.default_rng(0)
+    cases = [
+        rng.lognormal(2, 1.5, 1000),
+        rng.uniform(1e-3, 1e3, 500),
+        np.full(100, 42.0),
+        rng.exponential(250.0, 733),
+        np.concatenate([np.zeros(50), rng.uniform(1, 100, 50)]),
+    ]
+    for xs in cases:
+        _check_quantile_bound(xs, qs=(0, 10, 25, 50, 75, 90, 99, 100))
+
+
+@S
+@given(st.lists(st.floats(min_value=0.0, max_value=1e9,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=400),
+       st.integers(min_value=0, max_value=100))
+def test_histogram_quantile_bound_property(xs, q):
+    _check_quantile_bound(np.asarray(xs, np.float64), qs=(q,))
+
+
+# ---------------------------------------------------------------------------
+# tracer mechanics
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_is_null():
+    tr = SpanTracer(enabled=False)
+    assert tr.span("x") is NULL_SPAN
+    assert tr.annotate("x") is NULL_SPAN
+    with tr.span("x") as sp:
+        sp.set(tokens=3)
+    tr.instant("i")
+    tr.flow_point(0, "enqueue")
+    tr.async_begin("w", 0)
+    tr.async_end("w", 0)
+    assert tr.events == []
+
+
+def test_tracer_records_spans_and_args():
+    tr = SpanTracer(enabled=True)
+    with tr.span("outer") as sp:
+        sp.set(tokens=5)
+        with tr.span("inner", cat="dispatch"):
+            pass
+    assert [e["name"] for e in tr.events] == ["inner", "outer"]
+    outer = tr.events[1]
+    assert outer["ph"] == "X" and outer["args"]["tokens"] == 5
+    assert tr.events[0]["cat"] == "dispatch"
+    totals = tr.phase_totals()
+    assert totals["outer"]["count"] == 1 and totals["outer"]["ms"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: traced engine runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_plain(tiny):
+    cfg, api, params = tiny
+    tel = Telemetry(trace=True)
+    eng, out = _run(cfg, params, tel)
+    return tel, eng, out
+
+
+def _export(tel, tmp_path):
+    path = tel.tracer.export(tmp_path / "trace.json")
+    return json.loads(path.read_text())
+
+
+def test_trace_chrome_format(traced_plain, tmp_path):
+    tel, eng, out = traced_plain
+    doc = _export(tel, tmp_path)
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    for ev in doc["traceEvents"]:
+        assert "ph" in ev and "pid" in ev and "name" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0 and ev["ts"] >= 0.0
+    # thread metadata present (Perfetto track names)
+    assert any(e["ph"] == "M" and e["name"] == "thread_name"
+               for e in doc["traceEvents"])
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"admit", "prefill", "decode_segment", "sync",
+            "evict"} <= names
+
+
+def test_trace_spans_monotonic_and_nested(traced_plain, tmp_path):
+    """Complete events on one tid must form a proper nesting (a stack):
+    sorted by start, each span ends before every enclosing one."""
+    tel, eng, out = traced_plain
+    doc = _export(tel, tmp_path)
+    by_tid = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X":
+            by_tid.setdefault(ev["tid"], []).append(ev)
+    assert by_tid, "no complete events"
+    for tid, evs in by_tid.items():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []
+        for ev in evs:
+            t0, t1 = ev["ts"], ev["ts"] + ev["dur"]
+            while stack and t0 >= stack[-1] - 1e-6:
+                stack.pop()
+            for end in stack:
+                assert t1 <= end + 1e-6, (
+                    f"span {ev['name']} [{t0},{t1}] crosses an "
+                    f"enclosing span ending at {end}")
+            stack.append(t1)
+
+
+def test_trace_flow_covers_lifecycle(traced_plain, tmp_path):
+    """Every request's flow arrow runs s -> t... -> f, and every
+    submitted rid has one."""
+    tel, eng, out = traced_plain
+    doc = _export(tel, tmp_path)
+    flows = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] in ("s", "t", "f"):
+            flows.setdefault(ev["id"], []).append(ev)
+    assert set(flows) == {r["rid"] for r in out["results"]}
+    for rid, evs in flows.items():
+        phs = [e["ph"] for e in evs]
+        assert phs[0] == "s" and phs[-1] == "f"
+        assert all(p == "t" for p in phs[1:-1])
+        phases = [e["args"]["phase"] for e in evs]
+        assert phases[0] == "enqueue" and phases[-1] == "finish"
+        assert "prefill" in phases and "decode_segment" in phases
+        ts = [e["ts"] for e in evs]
+        assert ts == sorted(ts)
+
+
+def test_trace_tokens_reconcile_with_metrics(traced_plain):
+    """Span-attached token counts must sum to the metrics totals: the
+    trace and the summary are two views of the same run."""
+    tel, eng, out = traced_plain
+    span_tokens = sum(e["args"].get("tokens", 0)
+                      for e in tel.tracer.events if e["ph"] == "X"
+                      and e["name"] in ("prefill", "decode_segment"))
+    assert span_tokens == out["metrics"]["tokens"]
+
+
+def test_trace_tokens_reconcile_spec(tiny):
+    from repro.core.model_compress import compress_draft, draft_layers
+    cfg, api, params = tiny
+    draft = compress_draft(params, cfg, profile="w4l50")
+    dl = draft_layers(cfg, "w4l50")
+    tel = Telemetry(trace=True)
+    eng, out = _run(cfg, params, tel, spec_k=3, draft=draft, dlayers=dl)
+    span_tokens = sum(e["args"].get("tokens", 0)
+                      for e in tel.tracer.events if e["ph"] == "X"
+                      and e["name"] in ("prefill", "spec_segment"))
+    assert span_tokens == out["metrics"]["tokens"]
+    names = {e["name"] for e in tel.tracer.events if e["ph"] == "X"}
+    assert {"draft", "verify", "spec_segment"} <= names
+    # per-round draft/verify spans are dispatch-only by contract
+    assert all(e["cat"] == "dispatch" for e in tel.tracer.events
+               if e["ph"] == "X" and e["name"] in ("draft", "verify"))
+
+
+# ---------------------------------------------------------------------------
+# overhead-when-off: tracing must not change the sync structure
+# ---------------------------------------------------------------------------
+
+def test_tracing_adds_no_device_syncs(tiny, monkeypatch):
+    """Pin the zero-extra-syncs guarantee: the engine calls
+    ``jax.block_until_ready`` the same number of times with tracing on
+    and off (the tracer only reads the host clock at existing sync
+    points)."""
+    cfg, api, params = tiny
+    counts = {}
+    real = jax.block_until_ready
+
+    def counted(label):
+        def wrapper(x):
+            counts[label] += 1
+            return real(x)
+        return wrapper
+
+    for label, trace in (("off", False), ("on", True)):
+        counts[label] = 0
+        monkeypatch.setattr(jax, "block_until_ready", counted(label))
+        _run(cfg, params, Telemetry(trace=trace))
+    assert counts["on"] == counts["off"] > 0
+
+
+def test_disabled_telemetry_records_no_events(tiny):
+    cfg, api, params = tiny
+    tel = Telemetry()                      # defaults: everything off
+    eng, out = _run(cfg, params, tel)
+    assert tel.tracer.events == []
+    # the registry still accumulates (counters/gauges are always cheap)
+    snap = tel.registry.snapshot()
+    assert snap["engine.requests_finished"] == out["metrics"]["requests"]
+    assert snap["sched.queue_depth"] == 0
+    assert snap["kv.pages_free"] == snap["kv.num_pages"]
+
+
+# ---------------------------------------------------------------------------
+# metrics summary stability + registry wiring through the engine
+# ---------------------------------------------------------------------------
+
+def test_summary_keys_and_queue_wait(tiny):
+    cfg, api, params = tiny
+    eng, out = _run(cfg, params, Telemetry())
+    m = out["metrics"]
+    for k in ("requests", "tokens", "seconds", "tok_per_s",
+              "decode_steps", "ttft_ms_p50", "ttft_ms_p99",
+              "tpot_ms_p50", "tpot_ms_p99", "latency_ms_p50",
+              "latency_ms_p99", "itl_ms_mean", "spec_rounds",
+              "draft_proposed", "draft_accepted", "acceptance_rate",
+              "accepted_len_mean", "verify_tokens",
+              "queue_wait_ms_p50", "queue_wait_ms_p99"):
+        assert k in m, k
+    assert np.isfinite(m["queue_wait_ms_p50"])
+    assert m["queue_wait_ms_p50"] <= m["queue_wait_ms_p99"] + 1e-9
+    assert "queue p50" in eng.metrics.format_summary()
+
+
+def test_engine_registry_gauges_and_counters(tiny):
+    cfg, api, params = tiny
+    tel = Telemetry()
+    eng, out = _run(cfg, params, tel, n_req=5)
+    snap = tel.registry.snapshot()
+    assert snap["sched.submitted"] == 5
+    assert snap["sched.admissions"] == 5 == snap["sched.evictions"]
+    assert snap["kv.page_allocs"] == snap["kv.page_frees"] > 0
+    assert snap["kv.occupancy"] == 0.0
+    assert snap["engine.queue_wait_ms.count"] == 5
+    assert snap["jit.decode_retraces"] >= 0
+
+
+def test_stats_interval_emits_line(tiny, capsys):
+    cfg, api, params = tiny
+    _run(cfg, params, Telemetry(stats_interval_s=1e-9))
+    lines = [l for l in capsys.readouterr().out.splitlines()
+             if l.startswith("[stats] ")]
+    assert lines and "pages_free" in lines[0] and "queue" in lines[0]
