@@ -1,0 +1,217 @@
+"""Bench-regression gate: compare BENCH_serve.json against a baseline.
+
+The serve trajectory (BENCH_serve.json) is only a guarded signal if a
+regression FAILS CI instead of silently shifting the committed numbers.
+This gate compares two bench snapshots record-by-record with per-metric
+*noise tolerances*:
+
+* **timing-class** metrics (wall-clock dependent: ``us_per_call``,
+  ``*_ms*``, ``tok_per_s``, goodput, speedups, SLO attainment) get a
+  generous relative tolerance — CI runners are noisy and slower than
+  dev machines, so only order-of-magnitude regressions should trip;
+* **quality-class** metrics (deterministic given seeds: acceptance
+  rates, accepted lengths, compression ratios, traffic models,
+  bytes/token) get a tight tolerance — these should not move at all
+  unless the algorithm changed.
+
+Direction matters: ``tok_per_s`` dropping is a regression,
+``us_per_call`` dropping is an improvement. Keys the gate doesn't
+recognize are informational and never gated (``derived`` strings,
+``schema``, workload-shape constants).
+
+    python benchmarks/check_bench.py --baseline old.json --current new.json
+    python benchmarks/check_bench.py --self-test   # gate-of-the-gate
+
+``--self-test`` proves the gate mechanism on the committed baseline:
+baseline-vs-itself must pass, and an injected synthetic regression must
+be caught (also pinned by unit tests in ``tests/test_check_bench.py``).
+Exit codes: 0 clean, 1 regression(s), 2 usage/self-test-mechanism error.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+REPO_BENCH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# substring patterns, first match wins: (pattern, direction, tol_class)
+# direction +1 = higher is better, -1 = lower is better
+_RULES = (
+    ("us_per_call", -1, "timing"),
+    ("_ms", -1, "timing"),
+    ("itl", -1, "timing"),
+    ("goodput", +1, "timing"),
+    ("tok_per_s", +1, "timing"),
+    ("attainment", +1, "timing"),      # deadline hits ride the wall clock
+    ("speedup", +1, "timing"),         # a ratio of two timings
+    ("acceptance_rate", +1, "quality"),
+    ("accepted_len", +1, "quality"),
+    ("compression", +1, "quality"),
+    ("traffic_ratio", +1, "quality"),
+    ("bytes_per_token", -1, "quality"),
+)
+
+
+def classify(key: str):
+    """``(direction, tol_class)`` for a metric key, or None if the key
+    is informational (never gated)."""
+    for pat, direction, cls in _RULES:
+        if pat in key:
+            return direction, cls
+    return None
+
+
+@dataclasses.dataclass
+class Regression:
+    record: str
+    key: str
+    baseline: float
+    current: float
+    change: float                      # signed relative, + = increased
+    tolerance: float
+    direction: int
+
+    def __str__(self):
+        worse = "rose" if self.direction < 0 else "fell"
+        return (f"{self.record}.{self.key}: {worse} "
+                f"{self.baseline:g} -> {self.current:g} "
+                f"({self.change:+.1%}, tolerance {self.tolerance:.0%})")
+
+
+def compare(baseline: Dict, current: Dict, tol_timing: float = 0.5,
+            tol_quality: float = 0.05,
+            require_all: bool = False) -> List[Regression]:
+    """Gated-metric comparison of two bench snapshots (dicts keyed by
+    record name, records as emitted by ``benchmarks.common.emit``).
+    Records present only in the baseline are skipped unless
+    ``require_all`` (CI currents are merged supersets); records present
+    only in the current are new and always fine."""
+    out: List[Regression] = []
+    tol = {"timing": tol_timing, "quality": tol_quality}
+    for name, brec in sorted(baseline.items()):
+        crec = current.get(name)
+        if crec is None:
+            if require_all:
+                out.append(Regression(name, "<record>", 1.0, 0.0, -1.0,
+                                      0.0, +1))
+            continue
+        for key, bval in brec.items():
+            if not isinstance(bval, (int, float)) \
+                    or isinstance(bval, bool):
+                continue
+            rule = classify(key)
+            if rule is None:
+                continue
+            cval = crec.get(key)
+            if not isinstance(cval, (int, float)) \
+                    or isinstance(cval, bool):
+                continue                 # metric dropped: informational
+            if bval == 0.0:
+                continue                 # no relative scale to judge by
+            direction, cls = rule
+            change = (cval - bval) / abs(bval)
+            if direction * change < -tol[cls]:
+                out.append(Regression(name, key, float(bval), float(cval),
+                                      change, tol[cls], direction))
+    return out
+
+
+def _load(path) -> Dict:
+    doc = json.loads(Path(path).read_text())
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: want a dict of records")
+    return doc
+
+
+def inject_regression(records: Dict, factor: float = 10.0,
+                      key: Optional[str] = None):
+    """Return a deep copy with one gated metric degraded by ``factor``
+    (in its bad direction) — the synthetic regression the self-test and
+    unit tests feed the gate. Returns (copy, record_name, key)."""
+    bad = copy.deepcopy(records)
+    for name, rec in sorted(bad.items()):
+        for k, v in rec.items():
+            if key is not None and k != key:
+                continue
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v == 0.0:
+                continue
+            rule = classify(k)
+            if rule is None:
+                continue
+            direction, _ = rule
+            rec[k] = v * factor if direction < 0 else v / factor
+            return bad, name, k
+    raise ValueError("no gated metric found to inject a regression into")
+
+
+def self_test(baseline_path) -> int:
+    base = _load(baseline_path)
+    clean = compare(base, base)
+    if clean:
+        print("self-test FAILED: baseline vs itself reported regressions:")
+        for r in clean:
+            print(f"  {r}")
+        return 2
+    bad, name, key = inject_regression(base)
+    caught = compare(base, bad)
+    if not any(r.record == name and r.key == key for r in caught):
+        print(f"self-test FAILED: injected 10x regression on "
+              f"{name}.{key} was not caught")
+        return 2
+    print(f"self-test ok: baseline clean, injected regression on "
+          f"{name}.{key} caught ({len(base)} records)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(REPO_BENCH),
+                    help="baseline snapshot (default: committed "
+                         "BENCH_serve.json)")
+    ap.add_argument("--current", default=str(REPO_BENCH),
+                    help="snapshot to gate (default: BENCH_serve.json)")
+    ap.add_argument("--tol-timing", type=float, default=0.5,
+                    help="relative tolerance for wall-clock metrics")
+    ap.add_argument("--tol-quality", type=float, default=0.05,
+                    help="relative tolerance for deterministic metrics")
+    ap.add_argument("--require-all", action="store_true",
+                    help="a baseline record missing from the current "
+                         "snapshot is a failure")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate mechanism on the baseline: "
+                         "clean at baseline, catches an injected "
+                         "synthetic regression")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test(args.baseline)
+
+    try:
+        base, cur = _load(args.baseline), _load(args.current)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: {e}")
+        return 2
+    regs = compare(base, cur, tol_timing=args.tol_timing,
+                   tol_quality=args.tol_quality,
+                   require_all=args.require_all)
+    n_gated = sum(1 for rec in base.values() for k in rec
+                  if classify(k) is not None)
+    if regs:
+        print(f"BENCH REGRESSION: {len(regs)} metric(s) beyond tolerance "
+              f"(of {n_gated} gated):")
+        for r in regs:
+            print(f"  {r}")
+        return 1
+    print(f"bench gate clean: {n_gated} gated metrics across "
+          f"{len(base)} baseline records within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -170,6 +170,12 @@ def time_call(fn, *args, warmup=2, iters=5) -> float:
 
 _EMITTED: dict = {}
 
+# record-shape tag carried INSIDE every record (with its own name), so a
+# record pulled out of the merged snapshot — by the check_bench gate, a
+# plotting notebook, a grep — is self-describing without its dict key or
+# this file. Bump on incompatible record-shape changes.
+BENCH_SCHEMA = "repro-bench-record/v1"
+
 
 def emit(name: str, us_per_call: float, derived: str, timed: bool = True,
          **metrics):
@@ -187,8 +193,11 @@ def emit(name: str, us_per_call: float, derived: str, timed: bool = True,
     three-column shape either way.
     """
     print(f"{name},{us_per_call:.1f},{derived}")
-    rec = {"us_per_call": round(float(us_per_call), 1)} if timed \
-        else {"timed": False}
+    rec = {"name": name, "schema": BENCH_SCHEMA}
+    if timed:
+        rec["us_per_call"] = round(float(us_per_call), 1)
+    else:
+        rec["timed"] = False
     rec["derived"] = derived
     rec.update({k: (round(float(v), 4) if isinstance(v, float) else v)
                 for k, v in metrics.items()})
@@ -198,7 +207,9 @@ def emit(name: str, us_per_call: float, derived: str, timed: bool = True,
 def write_bench_json(filename: str = "BENCH_serve.json") -> Path:
     """Write every emitted record to ``<repo root>/<filename>`` (merging
     with an existing file, so serve benchmarks that run separately build
-    up one tracked snapshot)."""
+    up one tracked snapshot). Legacy merged records are normalized to
+    the self-describing shape (``name`` + ``schema`` inside the record)
+    on the way through."""
     import json
     path = Path(__file__).resolve().parent.parent / filename
     merged = {}
@@ -208,6 +219,9 @@ def write_bench_json(filename: str = "BENCH_serve.json") -> Path:
         except (ValueError, OSError):
             merged = {}
     merged.update(_EMITTED)
+    for name, rec in merged.items():
+        rec.setdefault("name", name)
+        rec.setdefault("schema", BENCH_SCHEMA)
     path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {len(_EMITTED)} benchmark records -> {path}")
     return path

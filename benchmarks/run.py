@@ -19,18 +19,33 @@ MODULES = [
     "roofline_report",     # EXPERIMENTS.md §Roofline source
 ]
 
+# serving-regime group (--serve): engine-path benchmarks that write the
+# BENCH_serve.json trajectory gated by benchmarks/check_bench.py. Their
+# main() takes an argv list (defaults apply when given []).
+SERVE_MODULES = [
+    "serve_engine",        # engine vs seed loop, load sweep, SLO goodput
+    "spec_decode",         # self-speculative serving ladder
+    "paged_attn",          # paged decode-attention kernel
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of modules")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serving-regime group (engine, spec "
+                         "decode, paged attention) instead of the "
+                         "paper-table group")
     args = ap.parse_args()
-    mods = args.only.split(",") if args.only else MODULES
+    mods = args.only.split(",") if args.only \
+        else (SERVE_MODULES if args.serve else MODULES)
     print("name,us_per_call,derived")
     failures = 0
     for m in mods:
         try:
-            importlib.import_module(f"benchmarks.{m}").main()
+            fn = importlib.import_module(f"benchmarks.{m}").main
+            fn([]) if m in SERVE_MODULES else fn()
         except Exception:
             failures += 1
             print(f"# FAILED {m}")

@@ -23,6 +23,8 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
                           Telemetry)
+from repro.engine.loadgen import (SLO, SLOLedger, WorkloadSpec, generate,
+                                  make_source)
 from repro.launch.serve import compressed_params, make_requests
 from repro.models.registry import get_model
 
@@ -187,6 +189,53 @@ def phase_breakdown_series(cfg, params, prompts, slots, max_new, max_seq):
          **{f"{k}_ms": v["ms"] for k, v in totals.items()})
 
 
+def load_sweep_series(cfg, params, slots, max_seq, seed=0):
+    """Load-conditioned serve trajectory (DESIGN.md §11): the same
+    seeded workload replayed open-loop at increasing offered rates
+    through the engine's timed-admission path, each run judged against
+    one fixed SLO. A batch-everything-at-t0 run measures capacity; this
+    sweep measures what load does to it — tok/s, TTFT p99, SLO
+    attainment and goodput vs offered req/s, plus one bursty point
+    (gamma arrivals, same mean rate) for the clumped-arrival tail."""
+    slo = SLO.parse("ttft=2000,tpot=500")
+    # compile the engine path for THESE params and the sweep's exact
+    # prompt shapes outside the recorded runs: replay the workload once
+    # at a fast rate (arrival draws consume the same rng budget at any
+    # rate, so the prompt draws — and hence the padded prefill shapes —
+    # match every swept run of the same seed)
+    warm = generate(WorkloadSpec(process="poisson", rate=64.0, requests=8,
+                                 prompt_min=4, prompt_max=10,
+                                 max_new_min=6, max_new_max=6, seed=seed),
+                    cfg.vocab)
+    InferenceEngine(cfg, params,
+                    EngineConfig(num_slots=slots, max_seq=max_seq),
+                    SamplingParams()).run(source=make_source(warm))
+    sweeps = [("poisson", r, 1.0) for r in (2.0, 8.0, 32.0)]
+    sweeps.append(("bursty", 8.0, 0.25))
+    for process, rate, burstiness in sweeps:
+        spec = WorkloadSpec(process=process, rate=rate,
+                            burstiness=burstiness, requests=8,
+                            prompt_min=4, prompt_max=10,
+                            max_new_min=6, max_new_max=6, seed=seed)
+        wl = generate(spec, cfg.vocab)
+        eng = InferenceEngine(
+            cfg, params, EngineConfig(num_slots=slots, max_seq=max_seq),
+            SamplingParams())
+        m = eng.run(source=make_source(wl))["metrics"]
+        ledger = SLOLedger(slo)
+        ledger.judge(eng.metrics)
+        s = ledger.summary()
+        emit(f"serve_load_{process}_r{rate:g}",
+             m["seconds"] * 1e6 / max(m["tokens"], 1),
+             f"offered {wl.offered_rate:.1f} req/s -> "
+             f"{m['tok_per_s']:.1f} tok/s, TTFT p99 "
+             f"{m['ttft_ms_p99']:.0f}ms, attainment {s['attainment']:.0%}, "
+             f"goodput {s['goodput_tok_per_s']:.1f} tok/s",
+             offered_req_per_s=wl.offered_rate, tok_per_s=m["tok_per_s"],
+             ttft_ms_p99=m["ttft_ms_p99"], attainment=s["attainment"],
+             goodput_tok_per_s=s["goodput_tok_per_s"])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--compress", default="gqsa,w4,none")
@@ -227,6 +276,10 @@ def main(argv=None):
     phase_breakdown_series(cfg, params, prompts, args.slots,
                            args.max_new, args.max_seq)
     decode_attention_series(cfg)
+    # load sweep on the paper configuration (GQSA-compressed serve)
+    gq = argparse.Namespace(compress="gqsa", sparsity=0.5, group_size=16)
+    load_sweep_series(cfg, compressed_params(cfg, gq, jax.random.PRNGKey(0)),
+                      args.slots, args.max_seq, seed=args.seed)
     mla_series(slots=args.slots, requests=args.requests,
                max_new=args.max_new, max_seq=args.max_seq, seed=args.seed)
     print(f"# engine vs seed-loop speedups: "

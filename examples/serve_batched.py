@@ -18,6 +18,17 @@ depth, free KV pages, spec acceptance/ladder) every 2 seconds:
 
     PYTHONPATH=src python -m repro.launch.serve --requests 8 --spec 4 \
         --trace /tmp/serve_trace.json --stats-interval 2
+
+Load-conditioned serving (DESIGN.md §11): instead of submitting every
+request up front, ``--workload`` replays a seeded arrival process
+(open-loop Poisson/bursty or a closed-loop user population) through the
+engine's timed-admission path, and ``--slo`` judges each request
+against TTFT/TPOT/e2e deadlines — printing attainment, goodput (tokens
+delivered within SLO per second) and per-miss phase attribution:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --workload 'process=poisson,rate=20,requests=16,prompt=4:12' \
+        --slo ttft=500,tpot=50 --slo-json /tmp/slo.json
 """
 import argparse
 

@@ -10,6 +10,8 @@ on top of the GQSA-compressed model zoo::
 """
 from repro.engine.engine import EngineConfig, InferenceEngine
 from repro.engine.kv_cache import PageAllocator, PagedKVCache
+from repro.engine.loadgen import (SLO, SLOLedger, Workload, WorkloadSpec,
+                                  generate, make_source)
 from repro.engine.metrics import EngineMetrics
 from repro.engine.sampling import SamplingParams, sample, spec_verify
 from repro.engine.scheduler import Request, Scheduler
@@ -19,4 +21,6 @@ from repro.engine.telemetry import (MetricsRegistry, SpanTracer,
 __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "PagedKVCache", "EngineMetrics", "SamplingParams", "sample",
            "spec_verify", "Request", "Scheduler", "Telemetry",
-           "MetricsRegistry", "SpanTracer", "StreamingHistogram"]
+           "MetricsRegistry", "SpanTracer", "StreamingHistogram",
+           "WorkloadSpec", "Workload", "generate", "make_source", "SLO",
+           "SLOLedger"]

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -185,6 +186,7 @@ class InferenceEngine:
         self._remaining = jnp.zeros((b,), jnp.int32)   # per-slot budget left
         self._block_tables = self.kv.device_block_tables()
         self._max_live = self.kv.max_pages_per_slot    # static, pow2-bucketed
+        self._source = None              # timed-admission stream, run() only
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
         # spec mode log: (tokens [B, W], counts [B]) per prefill/round
         self._spec_log: List = []
@@ -198,18 +200,47 @@ class InferenceEngine:
 
     # -- API ----------------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        rid = self.scheduler.submit(prompt, max_new_tokens)
-        self.metrics.record_enqueue(rid)
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               arrival_t: Optional[float] = None) -> int:
+        """Enqueue a request. ``arrival_t`` (a ``metrics.now()``-clock
+        timestamp) backdates the enqueue to the request's TRUE arrival —
+        the timed-admission loop polls its source at scheduling
+        boundaries, so a request can arrive well before it is submitted,
+        and queue wait / TTFT must be measured from arrival, not from
+        the boundary that happened to notice it."""
+        rid = self.scheduler.submit(prompt, max_new_tokens,
+                                    arrival_t=arrival_t)
+        self.metrics.record_enqueue(rid, t=arrival_t)
         return rid
 
-    def run(self) -> Dict:
+    def run(self, source=None) -> Dict:
         """Serve until the queue and all slots drain. Returns
-        {"results": [...], "metrics": {...}} (results in completion order)."""
+        {"results": [...], "metrics": {...}} (results in completion order).
+
+        ``source`` (an :class:`~repro.engine.loadgen.ArrivalSource`)
+        switches the loop to *timed admission* (open-loop serving,
+        DESIGN.md §11): instead of draining a pre-submitted queue, the
+        loop polls the source at every scheduling boundary, submits the
+        requests whose arrival times have passed (backdated to their
+        true arrivals), sleeps until the next arrival when idle, and
+        feeds completions back (closed-loop sources schedule their next
+        request off them). Requests therefore arrive MID-RUN, decode
+        segments get interrupted by admissions, and queue wait measures
+        real backpressure — the regime every SLO number must come from.
+        """
         sch = self.scheduler
         tracer = self.tel.tracer
+        self._source = source
         self.metrics.run_started()
-        while sch.has_work():
+        t0 = self.metrics.start_t
+        while sch.has_work() or (source is not None
+                                 and not source.exhausted):
+            if source is not None:
+                now = self.metrics.now()
+                for g in source.due(now - t0):
+                    arr = t0 + g.arrival_s if g.arrival_s is not None \
+                        else now
+                    self.submit(g.prompt, g.max_new, arrival_t=arr)
             with tracer.span("admit") as sp:
                 admitted = sch.admit()
                 sp.set(admitted=len(admitted),
@@ -224,6 +255,8 @@ class InferenceEngine:
                         f"request {head.rid} needs "
                         f"{self.kv.pages_needed(head.total_tokens)} pages "
                         f"but the pool only has {self.kv.num_pages}")
+                if source is not None and not sch.has_work():
+                    self._wait_for_arrival(source, t0)
                 continue
             if self.spec:
                 finished = self._spec_segment(actives)
@@ -234,6 +267,8 @@ class InferenceEngine:
                 for r in finished:
                     self.metrics.record_finish(r.rid, t, r.produced)
                     sch.finish(r)
+                    if source is not None:
+                        source.on_finish(t - t0)
                     # an evicted slot's acceptance history dies with it
                     self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
                 if finished:
@@ -243,6 +278,17 @@ class InferenceEngine:
         self.metrics.run_finished()
         return {"results": self._materialize(), "metrics":
                 self.metrics.summary()}
+
+    def _wait_for_arrival(self, source, t0: float) -> None:
+        """Engine idle, stream not exhausted: sleep until the next
+        arrival is due (capped so a closed-loop source whose next due
+        time depends on a completion re-polls promptly)."""
+        nxt = source.next_at()
+        if nxt is None:
+            return
+        dt = (t0 + nxt) - self.metrics.now()
+        if dt > 0:
+            time.sleep(min(dt, 0.05))
 
     def _decode_segment(self, actives: List[Request]) -> List[Request]:
         """Plain decode segment: no slot can exceed its budget before the
@@ -450,6 +496,8 @@ class InferenceEngine:
                 done_now.append(r)
         for r in done_now:
             self.scheduler.finish(r)
+            if self._source is not None:   # closed-loop completion feedback
+                self._source.on_finish(t - self.metrics.start_t)
         # merge the admitted slots into the device-side decode state
         m = jnp.asarray(mask)
         self._tokens = jnp.where(m, first, self._tokens)

@@ -1,0 +1,36 @@
+"""Load-conditioned serving harness (DESIGN.md §11).
+
+Two halves, one purpose — turning the engine's all-at-once offline
+numbers into load-conditioned serving signals:
+
+* :mod:`~repro.engine.loadgen.workload` — declarative, seeded workload
+  specs (arrival processes, prompt/budget distributions, shared-prefix
+  template pools) generating deterministic replayable request streams,
+  consumed by the engine's timed-admission loop through an
+  :class:`ArrivalSource`;
+* :mod:`~repro.engine.loadgen.slo` — a per-request SLO ledger judging
+  TTFT/TPOT/e2e deadlines into attainment, goodput and per-miss phase
+  attribution, built on the telemetry timestamps the engine already
+  takes.
+
+::
+
+    from repro.engine.loadgen import (WorkloadSpec, generate,
+                                      make_source, SLO, SLOLedger)
+    wl = generate(WorkloadSpec(process="poisson", rate=20,
+                               requests=32), vocab=cfg.vocab)
+    eng.run(source=make_source(wl))
+    ledger = SLOLedger(SLO(ttft_ms=200, tpot_ms=25))
+    ledger.judge(eng.metrics, eng.tel.tracer)
+    print(ledger.format_summary())
+"""
+from repro.engine.loadgen.slo import DEADLINES, SLO, SLOLedger, Verdict
+from repro.engine.loadgen.workload import (ArrivalSource, ClosedLoopSource,
+                                           GeneratedRequest, OpenLoopSource,
+                                           PROCESSES, Workload, WorkloadSpec,
+                                           generate, make_source)
+
+__all__ = ["WorkloadSpec", "Workload", "GeneratedRequest", "generate",
+           "make_source", "ArrivalSource", "OpenLoopSource",
+           "ClosedLoopSource", "PROCESSES", "SLO", "SLOLedger", "Verdict",
+           "DEADLINES"]

@@ -1,0 +1,217 @@
+"""Per-request SLO ledger: attainment, goodput, per-miss attribution.
+
+A deadline turns latency distributions into a serving *verdict*: every
+finished request is judged against the :class:`SLO`'s TTFT / TPOT / e2e
+deadlines, and the run reports
+
+* **attainment** — the fraction of requests that met every deadline;
+* **goodput** — tokens of SLO-met requests per second (tokens delivered
+  *within* deadline, not just tokens: a saturated engine can post a
+  high tok/s while its goodput collapses — the distinction GQSA's
+  serving claims live or die by under load);
+* **per-miss phase attribution** — which engine phase ate the budget:
+  ``queue_wait`` vs ``prefill`` for TTFT misses (straight from the
+  request's admission timestamps), and ``prefill`` (interference) vs
+  ``decode_segment`` for TPOT misses, by overlapping the request's
+  decode window with the tracer's prefill spans when a trace was taken
+  (the prefill/decode interference the ROADMAP's chunked-prefill item
+  exists to fix — this ledger is its measurement surface).
+
+The ledger reads the timestamps :class:`~repro.engine.metrics
+.EngineMetrics` already takes at the engine's sync points and publishes
+its verdict counters into the shared telemetry registry; it adds no
+instrumentation of its own (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+DEADLINES = ("ttft", "tpot", "e2e")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Deadlines in milliseconds; ``None`` leaves a dimension ungated.
+    ``tpot_ms`` gates the request's MEAN time per output token after the
+    first (the same statistic the metrics summary reports)."""
+    ttft_ms: Optional[float] = None
+    tpot_ms: Optional[float] = None
+    e2e_ms: Optional[float] = None
+
+    @classmethod
+    def parse(cls, arg: str) -> "SLO":
+        """``ttft=200,tpot=25,e2e=2000`` (ms; any subset)."""
+        vals: Dict[str, float] = {}
+        for item in arg.split(","):
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(f"--slo wants k=v items, got {item!r}")
+            k, v = item.split("=", 1)
+            k = k.strip()
+            if k not in DEADLINES:
+                raise ValueError(f"unknown SLO dimension {k!r} "
+                                 f"(want {'/'.join(DEADLINES)})")
+            vals[f"{k}_ms"] = float(v)
+        if not vals:
+            raise ValueError("empty --slo spec")
+        return cls(**vals)
+
+    def limit(self, dim: str) -> Optional[float]:
+        return getattr(self, f"{dim}_ms")
+
+
+@dataclasses.dataclass
+class Verdict:
+    """One request's judgement: measured values, per-deadline pass/fail,
+    and for each miss the phase that ate the budget."""
+    rid: int
+    n_tokens: int
+    ttft_ms: float
+    tpot_ms: float                       # nan when n_tokens <= 1
+    e2e_ms: float
+    queue_wait_ms: float
+    prefill_ms: float
+    decode_ms: float
+    met: bool = True
+    # deadline -> attributed phase, e.g. {"ttft": "queue_wait"}
+    misses: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _overlap_ms(events, name: str, lo_us: float, hi_us: float) -> float:
+    """Total duration (ms) of complete spans called ``name`` overlapping
+    the [lo_us, hi_us] window of the trace clock."""
+    total = 0.0
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("name") != name:
+            continue
+        a, b = ev["ts"], ev["ts"] + ev["dur"]
+        total += max(0.0, min(b, hi_us) - max(a, lo_us))
+    return total / 1e3
+
+
+class SLOLedger:
+    """Judges a finished run's requests against an :class:`SLO`.
+
+    Construct, run the engine, then :meth:`judge` with the engine's
+    metrics (and its tracer, if a trace was taken, for TPOT-miss
+    interference attribution); :meth:`summary` /
+    :meth:`format_summary` aggregate the verdicts.
+    """
+
+    def __init__(self, slo: SLO, registry=None):
+        self.slo = slo
+        self.verdicts: List[Verdict] = []
+        self._seconds = float("nan")
+        self._reg = registry
+        if registry is not None:
+            self._c_met = registry.counter("slo.requests_met")
+            self._c_missed = registry.counter("slo.requests_missed")
+            self._c_good = registry.counter("slo.goodput_tokens")
+
+    # -- judging --------------------------------------------------------
+
+    def judge(self, metrics, tracer=None) -> List[Verdict]:
+        """Build one :class:`Verdict` per finished request from the
+        metrics' per-request timings. ``tracer``: the run's span tracer
+        (optional) — its prefill spans attribute TPOT misses to
+        prefill interference where the overlap explains the overshoot.
+        """
+        self.verdicts = []
+        end = metrics.end_t if metrics.end_t is not None else metrics.now()
+        start = metrics.start_t if metrics.start_t is not None else end
+        self._seconds = max(end - start, 0.0)
+        events = tracer.events if tracer is not None \
+            and getattr(tracer, "enabled", False) else []
+        origin = getattr(tracer, "origin", 0.0)
+        for rid, rt in sorted(metrics.requests.items()):
+            if rt.finish_t <= 0.0:
+                continue                 # still in flight / never finished
+            v = Verdict(
+                rid=rid, n_tokens=rt.n_generated,
+                ttft_ms=rt.ttft_s * 1e3,
+                tpot_ms=(rt.tpot_s * 1e3 if rt.n_generated > 1
+                         else float("nan")),
+                e2e_ms=rt.latency_s * 1e3,
+                queue_wait_ms=rt.queue_wait_s * 1e3,
+                prefill_ms=(rt.first_token_t - rt.admit_t) * 1e3,
+                decode_ms=(rt.finish_t - rt.first_token_t) * 1e3)
+            self._judge_one(v, rt, events, origin)
+            self.verdicts.append(v)
+            if self._reg is not None:
+                (self._c_met if v.met else self._c_missed).inc()
+                if v.met:
+                    self._c_good.inc(v.n_tokens)
+        return self.verdicts
+
+    def _judge_one(self, v: Verdict, rt, events, origin) -> None:
+        lim = self.slo.limit("ttft")
+        if lim is not None and v.ttft_ms > lim:
+            v.misses["ttft"] = ("queue_wait"
+                                if v.queue_wait_ms >= v.prefill_ms
+                                else "prefill")
+        lim = self.slo.limit("tpot")
+        if lim is not None and v.n_tokens > 1 and v.tpot_ms > lim:
+            # overshoot: decode wall time beyond what the deadline
+            # allows for this many tokens; if concurrent prefill spans
+            # cover it, the miss is interference, not decode speed
+            overshoot_ms = v.decode_ms - lim * (v.n_tokens - 1)
+            interference = _overlap_ms(
+                events, "prefill",
+                (rt.first_token_t - origin) * 1e6,
+                (rt.finish_t - origin) * 1e6)
+            v.misses["tpot"] = ("prefill"
+                                if interference >= overshoot_ms > 0
+                                else "decode_segment")
+        lim = self.slo.limit("e2e")
+        if lim is not None and v.e2e_ms > lim:
+            phases = {"queue_wait": v.queue_wait_ms,
+                      "prefill": v.prefill_ms,
+                      "decode_segment": v.decode_ms}
+            v.misses["e2e"] = max(phases, key=phases.get)
+        v.met = not v.misses
+
+    # -- aggregation ----------------------------------------------------
+
+    def summary(self) -> Dict[str, float]:
+        n = len(self.verdicts)
+        met = sum(v.met for v in self.verdicts)
+        tokens = sum(v.n_tokens for v in self.verdicts)
+        good = sum(v.n_tokens for v in self.verdicts if v.met)
+        dt = max(self._seconds, 1e-9)
+        miss_by_dim = {d: sum(d in v.misses for v in self.verdicts)
+                       for d in DEADLINES}
+        miss_by_phase: Dict[str, int] = {}
+        for v in self.verdicts:
+            for phase in v.misses.values():
+                miss_by_phase[phase] = miss_by_phase.get(phase, 0) + 1
+        return {
+            "requests": n, "met": met,
+            "attainment": met / n if n else float("nan"),
+            "tokens": tokens, "goodput_tokens": good,
+            "tok_per_s": tokens / dt,
+            "goodput_tok_per_s": good / dt,
+            "seconds": self._seconds,
+            **{f"missed_{d}": c for d, c in miss_by_dim.items()},
+            **{f"miss_phase_{p}": c for p, c in miss_by_phase.items()},
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        lims = ", ".join(f"{d} {self.slo.limit(d):g}ms"
+                         for d in DEADLINES
+                         if self.slo.limit(d) is not None)
+        line = (f"SLO [{lims}]: attainment {s['attainment']:.1%} "
+                f"({s['met']}/{s['requests']}) | goodput "
+                f"{s['goodput_tok_per_s']:.1f} tok/s "
+                f"({s['goodput_tokens']}/{s['tokens']} tokens in SLO)")
+        misses = [f"{d} {s[f'missed_{d}']}" for d in DEADLINES
+                  if s[f"missed_{d}"]]
+        if misses:
+            phases = ", ".join(
+                f"{k[len('miss_phase_'):]} {v}" for k, v in s.items()
+                if k.startswith("miss_phase_"))
+            line += (f" | misses: {', '.join(misses)}"
+                     f" (by phase: {phases})")
+        return line

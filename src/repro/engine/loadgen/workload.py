@@ -1,0 +1,311 @@
+"""Declarative, seeded workload specs -> deterministic request streams.
+
+Every serving number this repo produced before this module was measured
+with all requests submitted up front — the one regime real traffic never
+takes. A :class:`WorkloadSpec` describes traffic instead: an *arrival
+process* (open-loop Poisson, bursty gamma, or closed-loop with think
+time), prompt-length and generation-budget distributions, and a
+*shared-prefix template pool* (the measurement surface the prefix-reuse
+roadmap item needs: TTFT vs prefix-share ratio). :func:`generate` turns
+the spec into a bit-reproducible :class:`Workload` — same spec + seed
+=> identical arrival times, prompts and budgets, pinned by a test — so
+a load run is replayable and two engines can be compared on the *same*
+traffic.
+
+The stream is consumed through an :class:`ArrivalSource`:
+
+* :class:`OpenLoopSource` — arrivals are wall-clock scheduled and keep
+  coming whether or not the engine keeps up (offered load is an input,
+  so saturation shows up as queue growth / SLO misses, not as a
+  silently stretched benchmark);
+* :class:`ClosedLoopSource` — a fixed population of users, each
+  resubmitting *think_s* after its previous request completes (offered
+  load is an output).
+
+Specs parse from JSON files or an inline ``k=v`` shorthand
+(``--workload 'process=poisson,rate=20,requests=16'``), DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+PROCESSES = ("poisson", "bursty", "closed")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Everything needed to regenerate a request stream bit-identically.
+
+    ``rate`` is the open-loop offered load in requests/s (ignored by
+    ``closed``); ``burstiness`` is the gamma shape of the ``bursty``
+    process (< 1 clusters arrivals into bursts, 1 IS poisson; the mean
+    inter-arrival stays 1/rate either way). ``closed`` runs
+    ``concurrency`` users, each thinking ``think_s`` (exponential mean)
+    between its completion and its next request. Prompt lengths and
+    generation budgets draw uniformly from the inclusive ranges. With
+    probability ``prefix_share`` a prompt starts with one of
+    ``prefix_pool`` shared templates of ``prefix_len`` tokens (drawn
+    once per workload), the rest of the prompt unique per request.
+    """
+    process: str = "poisson"
+    rate: float = 8.0                   # req/s offered (open-loop)
+    burstiness: float = 0.25            # gamma shape (bursty only)
+    concurrency: int = 2                # users (closed only)
+    think_s: float = 0.05               # mean think time (closed only)
+    requests: int = 16
+    prompt_min: int = 4
+    prompt_max: int = 16
+    max_new_min: int = 8
+    max_new_max: int = 8
+    prefix_pool: int = 0                # 0 disables shared prefixes
+    prefix_len: int = 0
+    prefix_share: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.process not in PROCESSES:
+            raise ValueError(f"process must be one of {PROCESSES}: "
+                             f"{self.process!r}")
+        if self.requests < 1:
+            raise ValueError(f"requests must be >= 1: {self.requests}")
+        if not 0 <= self.prompt_min <= self.prompt_max:
+            raise ValueError(f"bad prompt range "
+                             f"[{self.prompt_min}, {self.prompt_max}]")
+        if not 1 <= self.max_new_min <= self.max_new_max:
+            raise ValueError(f"bad max_new range "
+                             f"[{self.max_new_min}, {self.max_new_max}]")
+        if not 0.0 <= self.prefix_share <= 1.0:
+            raise ValueError(f"prefix_share must be in [0, 1]: "
+                             f"{self.prefix_share}")
+        if self.prefix_share > 0 and (self.prefix_pool < 1
+                                      or self.prefix_len < 1):
+            raise ValueError("prefix_share > 0 needs prefix_pool >= 1 "
+                             "and prefix_len >= 1")
+        if self.prefix_len > self.prompt_min:
+            raise ValueError(f"prefix_len {self.prefix_len} exceeds "
+                             f"prompt_min {self.prompt_min}")
+
+    # -- (de)serialization ----------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2,
+                          sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "WorkloadSpec":
+        doc = json.loads(text)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(doc) - known
+        if unknown:
+            raise ValueError(f"unknown workload keys: {sorted(unknown)}")
+        return cls(**doc)
+
+    @classmethod
+    def parse(cls, arg: str) -> "WorkloadSpec":
+        """A path to a JSON spec file, or an inline ``k=v`` comma list
+        (``process=poisson,rate=20,requests=16,prompt=4:12``; ``prompt``
+        and ``max_new`` accept ``lo:hi`` range shorthands)."""
+        p = Path(arg)
+        if arg.endswith(".json") or p.is_file():
+            return cls.from_json(p.read_text())
+        doc = {}
+        for item in arg.split(","):
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(f"inline workload wants k=v items, "
+                                 f"got {item!r}")
+            k, v = item.split("=", 1)
+            k = k.strip()
+            if k in ("prompt", "max_new"):
+                lo, _, hi = v.partition(":")
+                doc[f"{k}_min" if k == "prompt" else "max_new_min"] = \
+                    int(lo)
+                doc[f"{k}_max" if k == "prompt" else "max_new_max"] = \
+                    int(hi or lo)
+            elif k == "process":
+                doc[k] = v
+            elif k in ("rate", "burstiness", "think_s", "prefix_share"):
+                doc[k] = float(v)
+            else:
+                doc[k] = int(v)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(doc) - known
+        if unknown:
+            raise ValueError(f"unknown workload keys: {sorted(unknown)}")
+        return cls(**doc)
+
+
+@dataclasses.dataclass
+class GeneratedRequest:
+    idx: int
+    arrival_s: Optional[float]          # None for closed-loop
+    think_s: Optional[float]            # None for open-loop
+    prompt: np.ndarray                  # [prompt_len] int32
+    max_new: int
+    template: Optional[int] = None      # prefix-pool template id
+
+
+@dataclasses.dataclass
+class Workload:
+    spec: WorkloadSpec
+    requests: List[GeneratedRequest]
+
+    @property
+    def offered_rate(self) -> Optional[float]:
+        """Mean offered load (req/s) of an open-loop stream, None for
+        closed-loop (where the rate is an outcome, not an input)."""
+        if self.spec.process == "closed":
+            return None
+        last = self.requests[-1].arrival_s
+        return len(self.requests) / last if last > 0 else float("inf")
+
+
+def generate(spec: WorkloadSpec, vocab: int) -> Workload:
+    """Deterministic stream: one rng, fixed draw order (arrivals, then
+    templates, then per-request prompt/budget draws), so equal specs
+    generate bit-identical workloads on any host."""
+    rng = np.random.default_rng(spec.seed)
+    n = spec.requests
+    if spec.process == "poisson":
+        gaps = rng.exponential(1.0 / max(spec.rate, 1e-9), size=n)
+        arrivals = np.cumsum(gaps)
+        thinks = np.full(n, np.nan)
+    elif spec.process == "bursty":
+        # gamma(shape k, scale 1/(rate*k)): mean gap 1/rate, CV 1/sqrt(k)
+        # — k < 1 clusters arrivals into bursts separated by long gaps
+        k = max(spec.burstiness, 1e-3)
+        gaps = rng.gamma(k, 1.0 / (max(spec.rate, 1e-9) * k), size=n)
+        arrivals = np.cumsum(gaps)
+        thinks = np.full(n, np.nan)
+    else:                               # closed
+        arrivals = np.full(n, np.nan)
+        thinks = rng.exponential(spec.think_s, size=n) \
+            if spec.think_s > 0 else np.zeros(n)
+    templates = [rng.integers(0, vocab, size=spec.prefix_len)
+                 .astype(np.int32) for _ in range(spec.prefix_pool)]
+    out: List[GeneratedRequest] = []
+    for i in range(n):
+        plen = int(rng.integers(spec.prompt_min, spec.prompt_max + 1))
+        mnew = int(rng.integers(spec.max_new_min, spec.max_new_max + 1))
+        tid = None
+        # the prompt draws happen unconditionally so the stream past a
+        # request is invariant to ITS template coin flip
+        body = rng.integers(0, vocab, size=plen).astype(np.int32)
+        shared = float(rng.random()) < spec.prefix_share
+        if shared and templates:
+            tid = int(rng.integers(0, len(templates)))
+            body = body.copy()
+            body[:spec.prefix_len] = templates[tid]
+        out.append(GeneratedRequest(
+            idx=i,
+            arrival_s=None if np.isnan(arrivals[i]) else float(arrivals[i]),
+            think_s=None if np.isnan(thinks[i]) else float(thinks[i]),
+            prompt=body, max_new=mnew, template=tid))
+    return Workload(spec=spec, requests=out)
+
+
+class ArrivalSource:
+    """Feeds a workload into the engine's timed-admission loop. The
+    engine polls :meth:`due` with its relative clock at every scheduling
+    boundary and reports completions via :meth:`on_finish` (closed-loop
+    feedback); :meth:`next_at` bounds how long the engine may sleep when
+    idle."""
+
+    def due(self, now_s: float) -> List[GeneratedRequest]:
+        raise NotImplementedError
+
+    def on_finish(self, now_s: float) -> None:
+        pass
+
+    def next_at(self) -> Optional[float]:
+        raise NotImplementedError
+
+    @property
+    def exhausted(self) -> bool:
+        raise NotImplementedError
+
+
+class OpenLoopSource(ArrivalSource):
+    """Wall-clock scheduled arrivals (poisson/bursty): requests arrive
+    at their precomputed times whether or not the engine keeps up."""
+
+    def __init__(self, workload: Workload):
+        if workload.spec.process == "closed":
+            raise ValueError("closed-loop workload needs ClosedLoopSource")
+        self._pending = list(workload.requests)   # arrival-sorted already
+        self._i = 0
+
+    def due(self, now_s: float) -> List[GeneratedRequest]:
+        out = []
+        while (self._i < len(self._pending)
+               and self._pending[self._i].arrival_s <= now_s):
+            out.append(self._pending[self._i])
+            self._i += 1
+        return out
+
+    def next_at(self) -> Optional[float]:
+        if self._i >= len(self._pending):
+            return None
+        return self._pending[self._i].arrival_s
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._pending)
+
+
+class ClosedLoopSource(ArrivalSource):
+    """``concurrency`` users in lock-step with the engine: each user
+    issues its next request ``think_s`` after its previous one finishes
+    (the classic interactive population — offered load adapts to service
+    rate). The first ``concurrency`` requests are due at t=0; a
+    completion schedules the stream's next request at
+    ``now + its think_s``. Arrival timestamps are therefore assigned at
+    run time, but WHICH prompts arrive in WHAT order is still fully
+    determined by the spec."""
+
+    def __init__(self, workload: Workload):
+        if workload.spec.process != "closed":
+            raise ValueError("open-loop workload needs OpenLoopSource")
+        self._stream = list(workload.requests)
+        self._i = 0
+        self._due_at: List[Tuple[float, int]] = []
+        for _ in range(min(workload.spec.concurrency, len(self._stream))):
+            self._due_at.append((0.0, self._i))
+            self._i += 1
+
+    def due(self, now_s: float) -> List[GeneratedRequest]:
+        ready = [(t, i) for t, i in self._due_at if t <= now_s]
+        self._due_at = [(t, i) for t, i in self._due_at if t > now_s]
+        out = []
+        for t, i in sorted(ready):
+            r = self._stream[i]
+            r.arrival_s = t             # stamp the realized arrival
+            out.append(r)
+        return out
+
+    def on_finish(self, now_s: float) -> None:
+        if self._i < len(self._stream):
+            nxt = self._stream[self._i]
+            self._due_at.append((now_s + (nxt.think_s or 0.0), self._i))
+            self._i += 1
+
+    def next_at(self) -> Optional[float]:
+        if not self._due_at:
+            return None
+        return min(t for t, _ in self._due_at)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._stream) and not self._due_at
+
+
+def make_source(workload: Workload) -> ArrivalSource:
+    if workload.spec.process == "closed":
+        return ClosedLoopSource(workload)
+    return OpenLoopSource(workload)

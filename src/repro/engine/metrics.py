@@ -124,8 +124,11 @@ class EngineMetrics:
     def now(self) -> float:
         return time.perf_counter()
 
-    def record_enqueue(self, rid: int) -> None:
-        t = self.now()
+    def record_enqueue(self, rid: int, t: Optional[float] = None) -> None:
+        """``t`` backdates the enqueue to the request's true arrival
+        (timed admission polls its source at scheduling boundaries, so
+        submit can lag arrival) — queue wait and TTFT measure from it."""
+        t = self.now() if t is None else t
         self.requests[rid] = RequestTiming(enqueue_t=t)
         self._c_enqueued.inc()
         if self.tracer.enabled:
@@ -216,10 +219,15 @@ class EngineMetrics:
                      f"ITL {s['itl_ms_mean']:.2f}ms")
         return line
 
-    def format_stats(self) -> str:
+    def format_stats(self, interval=None) -> str:
         """One-line periodic snapshot for ``--stats-interval``: progress
         counters plus the live gauges other subsystems publish into the
-        shared registry (queue depth, free pages, spec ladder)."""
+        shared registry (queue depth, free pages, spec ladder).
+
+        ``interval``: a ``(dt_s, counter_deltas)`` pair from a registry
+        :class:`~repro.engine.telemetry.SnapshotWindow` tick — appended
+        as *interval rates* (tok/s, admissions/s over the window, not
+        lifetime averages, which hide stalls on long runs)."""
         g = self.registry.gauge
         dt = (self.now() - self.start_t) if self.start_t else 0.0
         toks = self._c_tokens.value
@@ -234,4 +242,11 @@ class EngineMetrics:
             acc = self._c_draft_accepted.value / p if p else float("nan")
             line += (f" spec_rounds {self.spec_rounds} accept {acc:.0%}"
                      f" rung {int(g('spec.ladder_rung').value)}")
+        if interval is not None:
+            dt_w, d = interval
+            dt_w = max(dt_w, 1e-9)
+            line += (f" | interval"
+                     f" {d.get('engine.decode_tokens', 0) / dt_w:.1f} tok/s"
+                     f" {d.get('sched.admissions', 0) / dt_w:.1f} adm/s"
+                     f" {d.get('engine.dispatches', 0) / dt_w:.1f} disp/s")
         return line

@@ -44,6 +44,11 @@ class Request:
     # request — per-request acceptance feeds the engine metrics)
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # true arrival timestamp (metrics.now() clock) under timed admission:
+    # the loadgen source polls at scheduling boundaries, so the request
+    # may have arrived well before submit() ran — queue wait and TTFT
+    # are measured from here (None: arrival == submit, the offline path)
+    arrival_t: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -98,10 +103,12 @@ class Scheduler:
 
     # -- queue side ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               arrival_t: Optional[float] = None) -> int:
         req = Request(rid=next(self._ids),
                       prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=int(max_new_tokens))
+                      max_new_tokens=int(max_new_tokens),
+                      arrival_t=arrival_t)
         if req.total_tokens > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt+budget {req.total_tokens} "

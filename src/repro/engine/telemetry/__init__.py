@@ -32,6 +32,7 @@ import time
 from typing import Optional
 
 from repro.engine.telemetry.registry import (Counter, Gauge, MetricsRegistry,
+                                             SnapshotWindow,
                                              StreamingHistogram)
 from repro.engine.telemetry.tracer import (NULL_SPAN, SpanTracer, TID_ENGINE,
                                            TID_REQUESTS)
@@ -55,6 +56,11 @@ class Telemetry:
         # first boundary after enabling always emits one line (so short
         # runs still produce a stats line for smoke tests)
         self._last_stats = -math.inf
+        # counter-delta window so periodic lines report interval rates
+        # (tok/s, admissions/s since the previous line), not lifetime
+        # cumulative averages that flatten stalls away
+        self._window = self.registry.window() if self.stats_interval_s \
+            else None
 
     def maybe_stats(self, metrics) -> None:
         """Called by the engine at segment boundaries: emit a one-line
@@ -65,9 +71,10 @@ class Telemetry:
         now = time.perf_counter()
         if now - self._last_stats >= self.stats_interval_s:
             self._last_stats = now
-            print("[stats] " + metrics.format_stats(), flush=True)
+            print("[stats] " + metrics.format_stats(
+                interval=self._window.tick()), flush=True)
 
 
 __all__ = ["Telemetry", "SpanTracer", "MetricsRegistry", "Counter",
-           "Gauge", "StreamingHistogram", "NULL_SPAN", "TID_ENGINE",
-           "TID_REQUESTS"]
+           "Gauge", "StreamingHistogram", "SnapshotWindow", "NULL_SPAN",
+           "TID_ENGINE", "TID_REQUESTS"]

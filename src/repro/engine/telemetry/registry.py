@@ -21,7 +21,8 @@ property test in ``tests/test_telemetry.py``).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
+import time
+from typing import Dict, Optional, Tuple
 
 
 class Counter:
@@ -138,6 +139,35 @@ class StreamingHistogram:
                 "max": self.max if self.count else float("nan")}
 
 
+class SnapshotWindow:
+    """Delta view over a registry's counters for *interval* reporting.
+
+    Cumulative counters answer "since the run started"; a periodic
+    stats line wants "since the last line" (a stalled engine looks
+    healthy forever on lifetime totals). :meth:`tick` returns
+    ``(dt_seconds, {counter_name: delta})`` since the previous tick
+    (or construction), then advances the window. Gauges are already
+    instantaneous and histograms cumulative by design — only counters
+    need the delta treatment.
+    """
+
+    __slots__ = ("_reg", "_last_t", "_last")
+
+    def __init__(self, registry: "MetricsRegistry"):
+        self._reg = registry
+        self._last_t = time.perf_counter()
+        self._last: Dict[str, float] = {
+            n: c.value for n, c in registry._counters.items()}
+
+    def tick(self) -> Tuple[float, Dict[str, float]]:
+        now = time.perf_counter()
+        dt = now - self._last_t
+        cur = {n: c.value for n, c in self._reg._counters.items()}
+        deltas = {n: v - self._last.get(n, 0) for n, v in cur.items()}
+        self._last, self._last_t = cur, now
+        return dt, deltas
+
+
 class MetricsRegistry:
     """Get-or-create registry of named counters/gauges/histograms.
 
@@ -170,6 +200,11 @@ class MetricsRegistry:
             h = self._hists[name] = StreamingHistogram(
                 name, growth if growth is not None else 1.1)
         return h
+
+    def window(self) -> SnapshotWindow:
+        """A counter-delta window starting now (interval rates for the
+        periodic stats line)."""
+        return SnapshotWindow(self)
 
     def snapshot(self) -> Dict[str, float]:
         """Flat ``{name: value}`` view (histograms expand to

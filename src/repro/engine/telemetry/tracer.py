@@ -105,6 +105,13 @@ class SpanTracer:
 
     # -- time -----------------------------------------------------------
 
+    @property
+    def origin(self) -> float:
+        """The perf_counter timestamp of the trace's t=0 — readers
+        correlating trace ``ts`` values with engine timestamps (the SLO
+        ledger's interference attribution) subtract this."""
+        return self._t0
+
     def _us(self, t: float) -> float:
         return (t - self._t0) * 1e6
 

@@ -8,10 +8,23 @@ slots backed by a paged KV cache; prompts are prefilled in one batched
 flash-attention call (no one-token-per-step prompt feeding) and decode
 runs one fused per-slot-position step with device-side token feedback.
 Reports tokens/s, TTFT, TPOT and p50/p99 latency (repro.engine).
+
+Load-conditioned serving (DESIGN.md §11): ``--workload`` replaces the
+submit-everything-up-front default with a seeded traffic spec (open-loop
+Poisson / bursty / closed-loop arrival processes, prompt and budget
+distributions, shared-prefix pools) whose requests arrive MID-RUN
+through the engine's timed-admission loop, and ``--slo`` judges every
+request against TTFT/TPOT/e2e deadlines — printing attainment, goodput
+(tokens delivered within deadline) and per-miss phase attribution:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2_7b \
+        --workload 'process=poisson,rate=20,requests=16' \
+        --slo ttft=500,tpot=50 --slo-json /tmp/slo.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import List
 
@@ -26,6 +39,8 @@ from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
 from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
                           Telemetry)
+from repro.engine.loadgen import SLO, SLOLedger, generate, make_source
+from repro.engine.loadgen import WorkloadSpec
 from repro.models.registry import get_model
 
 
@@ -108,7 +123,37 @@ def main(argv=None):
                     metavar="SEC",
                     help="print a one-line engine stats snapshot every "
                          "SEC seconds of serving (0 = off)")
+    ap.add_argument("--workload", default=None, metavar="SPEC",
+                    help="load-conditioned serving: a workload-spec JSON "
+                         "file or inline k=v list ('process=poisson,"
+                         "rate=20,requests=16,prompt=4:12,max_new=8'); "
+                         "requests arrive mid-run through timed "
+                         "admission instead of all up front (overrides "
+                         "--requests/--max-new)")
+    ap.add_argument("--slo", default=None, metavar="DEADLINES",
+                    help="judge every request against deadlines (ms): "
+                         "'ttft=500,tpot=50,e2e=2000' (any subset); "
+                         "prints attainment + goodput + per-miss phase "
+                         "attribution after the run")
+    ap.add_argument("--slo-json", default=None, metavar="OUT.json",
+                    help="also write the SLO ledger (summary + "
+                         "per-request verdicts) as JSON")
     args = ap.parse_args(argv)
+
+    workload_spec = None
+    if args.workload is not None:
+        try:
+            workload_spec = WorkloadSpec.parse(args.workload)
+        except (ValueError, OSError) as e:
+            ap.error(f"--workload: {e}")
+    slo = None
+    if args.slo is not None:
+        try:
+            slo = SLO.parse(args.slo)
+        except ValueError as e:
+            ap.error(f"--slo: {e}")
+    if args.slo_json and slo is None:
+        ap.error("--slo-json requires --slo")
 
     spec_fanout = None
     if args.spec_tree:
@@ -163,23 +208,59 @@ def main(argv=None):
                        top_p=args.top_p),
         draft_params=draft_params, telemetry=telemetry)
 
-    nprng = np.random.default_rng(args.seed)
-    # prompts must leave room for the generation budget within max_seq
-    maxlen = args.max_seq - args.max_new
-    if maxlen < 1:
-        ap.error(f"--max-new {args.max_new} leaves no prompt room within "
-                 f"--max-seq {args.max_seq}")
-    lo = min(4, maxlen)
-    hi = max(lo + 1, min(16, maxlen + 1))
-    prompts: List[np.ndarray] = make_requests(args.requests, cfg.vocab,
-                                              nprng, lo=lo, hi=hi)
-    for p in prompts:
-        engine.submit(p, args.max_new)
-    out = engine.run()
+    if workload_spec is not None:
+        # every stream request must fit: worst-case prompt + budget
+        worst = workload_spec.prompt_max + workload_spec.max_new_max
+        if worst > args.max_seq:
+            ap.error(f"--workload: prompt_max + max_new_max = {worst} "
+                     f"exceeds --max-seq {args.max_seq}")
+        workload = generate(workload_spec, cfg.vocab)
+        rate = workload.offered_rate
+        print(f"workload: {workload_spec.process}, "
+              f"{workload_spec.requests} requests"
+              + (f", offered {rate:.1f} req/s" if rate is not None
+                 else f", {workload_spec.concurrency} users closed-loop"))
+        out = engine.run(source=make_source(workload))
+    else:
+        nprng = np.random.default_rng(args.seed)
+        # prompts must leave room for the generation budget within max_seq
+        maxlen = args.max_seq - args.max_new
+        if maxlen < 1:
+            ap.error(f"--max-new {args.max_new} leaves no prompt room "
+                     f"within --max-seq {args.max_seq}")
+        lo = min(4, maxlen)
+        hi = max(lo + 1, min(16, maxlen + 1))
+        prompts: List[np.ndarray] = make_requests(args.requests, cfg.vocab,
+                                                  nprng, lo=lo, hi=hi)
+        for p in prompts:
+            engine.submit(p, args.max_new)
+        out = engine.run()
 
     m = out["metrics"]
     print(engine.metrics.format_summary()
           + f" ({args.slots} slots, {m['decode_steps']} decode steps)")
+    slo_summary = None
+    if slo is not None:
+        ledger = SLOLedger(slo, registry=telemetry.registry)
+        verdicts = ledger.judge(engine.metrics, telemetry.tracer)
+        slo_summary = ledger.summary()
+        print(ledger.format_summary())
+        if args.slo_json:
+            doc = {"slo": {d: slo.limit(d) for d in ("ttft", "tpot", "e2e")
+                           if slo.limit(d) is not None},
+                   "summary": slo_summary,
+                   "requests": [{"rid": v.rid, "met": v.met,
+                                 "n_tokens": v.n_tokens,
+                                 "ttft_ms": round(v.ttft_ms, 3),
+                                 # single-token requests have no TPOT
+                                 "tpot_ms": (None if v.tpot_ms != v.tpot_ms
+                                             else round(v.tpot_ms, 3)),
+                                 "e2e_ms": round(v.e2e_ms, 3),
+                                 "queue_wait_ms": round(v.queue_wait_ms, 3),
+                                 "misses": v.misses} for v in verdicts]}
+            with open(args.slo_json, "w") as f:
+                json.dump(doc, f, indent=2)
+            print(f"wrote SLO ledger -> {args.slo_json}")
     if args.trace is not None:
         path = telemetry.tracer.export(args.trace)
         totals = telemetry.tracer.phase_totals()
@@ -188,8 +269,11 @@ def main(argv=None):
         for name, d in sorted(totals.items(), key=lambda kv: -kv[1]["ms"]):
             print(f"  {name:16s} {d['ms']:9.2f}ms  x{d['count']}")
     # legacy result keys (kept stable for tests + examples)
-    return dict(m, requests=int(m["requests"]), tokens=int(m["tokens"]),
-                results=out["results"])
+    res = dict(m, requests=int(m["requests"]), tokens=int(m["tokens"]),
+               results=out["results"])
+    if slo_summary is not None:
+        res["slo"] = slo_summary
+    return res
 
 
 if __name__ == "__main__":

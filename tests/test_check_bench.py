@@ -1,0 +1,162 @@
+"""Bench-regression gate: tolerance classes, direction awareness, the
+self-test mechanism, and CLI exit codes — the gate must fail on an
+injected regression and pass at baseline, or CI's BENCH_serve.json
+gating is theater."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_bench import (classify, compare, inject_regression,
+                                    main, self_test)
+
+BASELINE = {
+    "serve_engine_gqsa": {
+        "name": "serve_engine_gqsa", "schema": "repro-bench-record/v1",
+        "us_per_call": 4000.0, "derived": "80 tok/s",
+        "tok_per_s": 80.0, "ttft_ms_p50": 120.0, "speedup_vs_seed": 3.0},
+    "serve_load_poisson_r8": {
+        "name": "serve_load_poisson_r8", "schema": "repro-bench-record/v1",
+        "us_per_call": 9000.0, "derived": "load point",
+        "offered_req_per_s": 8.0, "tok_per_s": 70.0, "ttft_ms_p99": 40.0,
+        "attainment": 1.0, "goodput_tok_per_s": 70.0},
+    "spec_ladder": {
+        "name": "spec_ladder", "schema": "repro-bench-record/v1",
+        "timed": False, "derived": "acceptance",
+        "acceptance_rate": 0.8, "accepted_len_mean": 2.4},
+}
+
+
+def _mutate(name, key, value):
+    cur = json.loads(json.dumps(BASELINE))
+    cur[name][key] = value
+    return cur
+
+
+def test_classify_direction_and_class():
+    assert classify("us_per_call") == (-1, "timing")
+    assert classify("ttft_ms_p99") == (-1, "timing")
+    assert classify("goodput_tok_per_s") == (+1, "timing")
+    assert classify("attainment") == (+1, "timing")
+    assert classify("acceptance_rate") == (+1, "quality")
+    assert classify("bytes_per_token") == (-1, "quality")
+    assert classify("derived") is None
+    assert classify("schema") is None
+    assert classify("offered_req_per_s") is None   # workload constant
+
+
+def test_baseline_vs_itself_is_clean():
+    assert compare(BASELINE, BASELINE) == []
+
+
+def test_catches_lower_better_regression_not_improvement():
+    # us_per_call 9000 -> 20000 (+122%) beyond the 50% timing tolerance
+    regs = compare(BASELINE,
+                   _mutate("serve_load_poisson_r8", "us_per_call", 20000.0))
+    assert [(r.record, r.key) for r in regs] == \
+        [("serve_load_poisson_r8", "us_per_call")]
+    # dropping is an improvement, never flagged
+    assert compare(BASELINE,
+                   _mutate("serve_load_poisson_r8", "us_per_call",
+                           100.0)) == []
+
+
+def test_catches_higher_better_regression_not_improvement():
+    regs = compare(BASELINE,
+                   _mutate("serve_engine_gqsa", "tok_per_s", 10.0))
+    assert [(r.record, r.key) for r in regs] == \
+        [("serve_engine_gqsa", "tok_per_s")]
+    assert compare(BASELINE,
+                   _mutate("serve_engine_gqsa", "tok_per_s", 500.0)) == []
+
+
+def test_quality_tolerance_is_tighter_than_timing():
+    # -10%: inside the 50% timing tolerance...
+    assert compare(BASELINE,
+                   _mutate("serve_engine_gqsa", "tok_per_s", 72.0)) == []
+    # ...but beyond the 5% quality tolerance on a seeded statistic
+    regs = compare(BASELINE,
+                   _mutate("spec_ladder", "acceptance_rate", 0.72))
+    assert [(r.record, r.key) for r in regs] == \
+        [("spec_ladder", "acceptance_rate")]
+    # within quality tolerance: clean
+    assert compare(BASELINE,
+                   _mutate("spec_ladder", "acceptance_rate", 0.78)) == []
+
+
+def test_tolerances_are_configurable():
+    cur = _mutate("serve_engine_gqsa", "tok_per_s", 72.0)   # -10%
+    assert compare(BASELINE, cur, tol_timing=0.05) != []
+    cur = _mutate("spec_ladder", "acceptance_rate", 0.72)   # -10%
+    assert compare(BASELINE, cur, tol_quality=0.2) == []
+
+
+def test_missing_record_and_require_all():
+    cur = json.loads(json.dumps(BASELINE))
+    del cur["spec_ladder"]
+    assert compare(BASELINE, cur) == []
+    regs = compare(BASELINE, cur, require_all=True)
+    assert [(r.record, r.key) for r in regs] == \
+        [("spec_ladder", "<record>")]
+    # new records in the current snapshot are always fine
+    cur = json.loads(json.dumps(BASELINE))
+    cur["brand_new"] = {"us_per_call": 1.0, "derived": "x"}
+    assert compare(BASELINE, cur) == []
+
+
+def test_ungated_and_non_numeric_keys_ignored():
+    cur = _mutate("serve_load_poisson_r8", "offered_req_per_s", 9999.0)
+    cur["serve_engine_gqsa"]["derived"] = "totally different prose"
+    cur["serve_engine_gqsa"]["tok_per_s"] = "not-a-number"
+    assert compare(BASELINE, cur) == []
+
+
+def test_inject_regression_is_caught():
+    bad, name, key = inject_regression(BASELINE)
+    regs = compare(BASELINE, bad)
+    assert any(r.record == name and r.key == key for r in regs)
+    # targeting a specific key works too
+    bad, name, key = inject_regression(BASELINE, key="goodput_tok_per_s")
+    assert key == "goodput_tok_per_s"
+    assert bad[name][key] == pytest.approx(7.0)      # higher-better: /10
+    assert any(r.key == key for r in compare(BASELINE, bad))
+
+
+def test_self_test_roundtrip(tmp_path):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(BASELINE))
+    assert self_test(str(path)) == 0
+
+
+def test_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASELINE))
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(
+        _mutate("serve_engine_gqsa", "tok_per_s", 10.0)))
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(BASELINE))
+    assert main(["--baseline", str(base), "--current", str(ok)]) == 0
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+    # a loose enough tolerance waves the same diff through
+    assert main(["--baseline", str(base), "--current", str(cur),
+                 "--tol-timing", "10.0"]) == 0
+    assert main(["--baseline", str(base), "--current",
+                 str(tmp_path / "missing.json")]) == 2
+    assert main(["--baseline", str(base), "--self-test"]) == 0
+
+
+def test_committed_baseline_passes_its_own_gate():
+    """The tracked BENCH_serve.json must satisfy the gate's self-test —
+    otherwise the CI steps are wired to a broken baseline."""
+    repo = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    assert repo.is_file()
+    assert self_test(str(repo)) == 0
+    records = json.loads(repo.read_text())
+    for name, rec in records.items():
+        assert rec.get("name") == name                # self-describing
+        assert "schema" in rec
+        assert ("us_per_call" in rec) != (rec.get("timed") is False)

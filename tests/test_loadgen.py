@@ -1,0 +1,339 @@
+"""Load-conditioned serving: workload determinism, arrival sources,
+SLO-ledger math vs hand-computed verdicts, and the engine's timed
+admission path (open- and closed-loop) with backdated arrivals."""
+import dataclasses
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import EngineConfig, InferenceEngine, SamplingParams
+from repro.engine.loadgen import (SLO, ClosedLoopSource, OpenLoopSource,
+                                  SLOLedger, WorkloadSpec, generate,
+                                  make_source)
+from repro.engine.metrics import EngineMetrics, RequestTiming
+from repro.engine.telemetry import MetricsRegistry
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, api, params
+
+
+# ---------------------------------------------------------------------------
+# workload generation: determinism, distributions, prefix pools
+# ---------------------------------------------------------------------------
+
+def test_generate_bit_identical_for_equal_specs():
+    spec = WorkloadSpec(process="poisson", rate=20.0, requests=32,
+                        prompt_min=4, prompt_max=12, max_new_min=2,
+                        max_new_max=8, prefix_pool=3, prefix_len=4,
+                        prefix_share=0.5, seed=7)
+    a = generate(spec, vocab=256)
+    b = generate(spec, vocab=256)
+    # and a JSON round trip of the spec regenerates the same stream
+    c = generate(WorkloadSpec.from_json(spec.to_json()), vocab=256)
+    for other in (b, c):
+        assert len(other.requests) == len(a.requests)
+        for ra, rb in zip(a.requests, other.requests):
+            assert ra.arrival_s == rb.arrival_s
+            assert ra.max_new == rb.max_new
+            assert ra.template == rb.template
+            np.testing.assert_array_equal(ra.prompt, rb.prompt)
+
+
+def test_generate_seed_changes_stream():
+    base = WorkloadSpec(requests=16, seed=0)
+    a = generate(base, vocab=256)
+    b = generate(dataclasses.replace(base, seed=1), vocab=256)
+    assert any(ra.arrival_s != rb.arrival_s
+               for ra, rb in zip(a.requests, b.requests))
+
+
+def test_generate_respects_ranges_and_ordering():
+    spec = WorkloadSpec(process="poisson", rate=50.0, requests=64,
+                        prompt_min=3, prompt_max=9, max_new_min=2,
+                        max_new_max=5, seed=11)
+    wl = generate(spec, vocab=256)
+    arrivals = [r.arrival_s for r in wl.requests]
+    assert all(a > 0 for a in arrivals)
+    assert arrivals == sorted(arrivals)
+    for r in wl.requests:
+        assert 3 <= len(r.prompt) <= 9
+        assert 2 <= r.max_new <= 5
+        assert r.prompt.dtype == np.int32
+        assert r.prompt.min() >= 0 and r.prompt.max() < 256
+    assert wl.offered_rate == pytest.approx(64 / arrivals[-1])
+
+
+def test_prefix_pool_shares_templates():
+    spec = WorkloadSpec(requests=24, prompt_min=6, prompt_max=10,
+                        prefix_pool=2, prefix_len=4, prefix_share=1.0,
+                        seed=3)
+    wl = generate(spec, vocab=256)
+    by_template = {}
+    for r in wl.requests:
+        assert r.template in (0, 1)
+        by_template.setdefault(r.template, []).append(r.prompt[:4])
+    assert set(by_template) == {0, 1}
+    for group in by_template.values():
+        for p in group[1:]:
+            np.testing.assert_array_equal(group[0], p)
+    # the two templates differ (else "sharing" is vacuous)
+    assert not np.array_equal(by_template[0][0], by_template[1][0])
+    # share=0 disables templates entirely
+    wl0 = generate(dataclasses.replace(spec, prefix_share=0.0), vocab=256)
+    assert all(r.template is None for r in wl0.requests)
+
+
+def test_bursty_matches_mean_rate_but_clusters():
+    rate, n = 8.0, 2000
+    pois = generate(WorkloadSpec(process="poisson", rate=rate, requests=n,
+                                 seed=5), vocab=16)
+    burst = generate(WorkloadSpec(process="bursty", rate=rate,
+                                  burstiness=0.25, requests=n, seed=5),
+                     vocab=16)
+    for wl in (pois, burst):
+        gaps = np.diff([0.0] + [r.arrival_s for r in wl.requests])
+        assert np.mean(gaps) == pytest.approx(1.0 / rate, rel=0.15)
+    bgaps = np.diff([0.0] + [r.arrival_s for r in burst.requests])
+    pgaps = np.diff([0.0] + [r.arrival_s for r in pois.requests])
+    # gamma shape 0.25 -> CV 2; poisson -> CV 1
+    assert np.std(bgaps) / np.mean(bgaps) > \
+        1.3 * np.std(pgaps) / np.mean(pgaps)
+
+
+def test_spec_validation_rejects_bad_fields():
+    with pytest.raises(ValueError):
+        WorkloadSpec(process="uniform")
+    with pytest.raises(ValueError):
+        WorkloadSpec(requests=0)
+    with pytest.raises(ValueError):
+        WorkloadSpec(prompt_min=8, prompt_max=4)
+    with pytest.raises(ValueError):
+        WorkloadSpec(prefix_share=0.5)          # needs pool + len
+    with pytest.raises(ValueError):
+        WorkloadSpec(prefix_pool=1, prefix_len=8, prefix_share=0.5,
+                     prompt_min=4)              # prefix longer than prompt
+
+
+def test_spec_parse_inline_and_file(tmp_path):
+    spec = WorkloadSpec.parse(
+        "process=bursty,rate=20,burstiness=0.5,requests=4,"
+        "prompt=4:12,max_new=6,seed=3")
+    assert spec == WorkloadSpec(process="bursty", rate=20.0,
+                                burstiness=0.5, requests=4, prompt_min=4,
+                                prompt_max=12, max_new_min=6,
+                                max_new_max=6, seed=3)
+    path = tmp_path / "wl.json"
+    path.write_text(spec.to_json())
+    assert WorkloadSpec.parse(str(path)) == spec
+    with pytest.raises(ValueError):
+        WorkloadSpec.parse("rate=20,bogus_key=1")
+    with pytest.raises(ValueError):
+        WorkloadSpec.parse("just-a-word")
+
+
+# ---------------------------------------------------------------------------
+# arrival sources
+# ---------------------------------------------------------------------------
+
+def test_open_loop_source_releases_by_clock():
+    wl = generate(WorkloadSpec(process="poisson", rate=10.0, requests=6,
+                               seed=2), vocab=16)
+    src = make_source(wl)
+    assert isinstance(src, OpenLoopSource)
+    times = [r.arrival_s for r in wl.requests]
+    assert src.due(times[1] + 1e-9) == wl.requests[:2]
+    assert src.due(times[1]) == []              # already drained
+    assert src.next_at() == times[2]
+    assert not src.exhausted
+    assert src.due(times[-1] + 1.0) == wl.requests[2:]
+    assert src.exhausted and src.next_at() is None
+
+
+def test_closed_loop_source_population_feedback():
+    wl = generate(WorkloadSpec(process="closed", concurrency=2,
+                               think_s=0.5, requests=5, seed=4), vocab=16)
+    src = make_source(wl)
+    assert isinstance(src, ClosedLoopSource)
+    first = src.due(0.0)
+    assert [r.idx for r in first] == [0, 1]     # population primed at t=0
+    assert all(r.arrival_s == 0.0 for r in first)
+    assert src.due(100.0) == []                 # nothing until a finish
+    src.on_finish(1.0)                          # user slot frees at t=1
+    nxt = src.next_at()
+    assert nxt == pytest.approx(1.0 + wl.requests[2].think_s)
+    assert src.due(nxt - 1e-6) == []
+    got = src.due(nxt)
+    assert [r.idx for r in got] == [2]
+    assert got[0].arrival_s == pytest.approx(nxt)   # realized stamp
+    src.on_finish(2.0)
+    src.on_finish(2.0)
+    src.due(100.0)
+    src.on_finish(3.0)                          # stream spent: no-op
+    assert src.due(100.0) == [] and src.exhausted
+
+
+def test_source_type_mismatch_rejected():
+    open_wl = generate(WorkloadSpec(requests=2), vocab=8)
+    closed_wl = generate(WorkloadSpec(process="closed", requests=2),
+                         vocab=8)
+    with pytest.raises(ValueError):
+        ClosedLoopSource(open_wl)
+    with pytest.raises(ValueError):
+        OpenLoopSource(closed_wl)
+
+
+# ---------------------------------------------------------------------------
+# SLO ledger vs hand-computed verdicts
+# ---------------------------------------------------------------------------
+
+def _metrics(rows):
+    """rows: rid -> (enqueue, admit, first_token, finish, n_generated),
+    seconds on a synthetic clock starting at 0."""
+    m = EngineMetrics()
+    m.start_t, m.end_t = 0.0, 10.0
+    for rid, row in rows.items():
+        enq, adm, first, fin, n = row
+        m.requests[rid] = RequestTiming(enqueue_t=enq, admit_t=adm,
+                                        first_token_t=first, finish_t=fin,
+                                        n_generated=n)
+    return m
+
+
+def test_ledger_matches_hand_computed_attainment_and_goodput():
+    m = _metrics({
+        # met: ttft 100ms, tpot 100ms, e2e 1100ms, 11 tokens
+        0: (0.0, 0.05, 0.1, 1.1, 11),
+        # ttft 600ms miss; queue 500ms >= prefill 100ms -> queue_wait
+        1: (0.0, 0.5, 0.6, 1.6, 11),
+        # ttft 500ms miss via prefill (queue 10ms); tpot 500ms miss,
+        # no trace -> decode_segment
+        2: (0.0, 0.01, 0.5, 1.0, 2),
+        # unfinished: never judged
+        3: (0.0, 0.0, 0.0, 0.0, 0),
+    })
+    reg = MetricsRegistry()
+    ledger = SLOLedger(SLO(ttft_ms=200.0, tpot_ms=150.0, e2e_ms=2000.0),
+                       registry=reg)
+    verdicts = {v.rid: v for v in ledger.judge(m)}
+    assert set(verdicts) == {0, 1, 2}
+    assert verdicts[0].met and not verdicts[0].misses
+    assert verdicts[1].misses == {"ttft": "queue_wait"}
+    assert verdicts[2].misses == {"ttft": "prefill",
+                                  "tpot": "decode_segment"}
+
+    s = ledger.summary()
+    assert s["requests"] == 3 and s["met"] == 1
+    assert s["attainment"] == pytest.approx(1 / 3)
+    assert s["tokens"] == 24 and s["goodput_tokens"] == 11
+    assert s["tok_per_s"] == pytest.approx(24 / 10.0)
+    assert s["goodput_tok_per_s"] == pytest.approx(11 / 10.0)
+    assert s["missed_ttft"] == 2 and s["missed_tpot"] == 1
+    assert s["missed_e2e"] == 0
+    assert s["miss_phase_queue_wait"] == 1
+    assert s["miss_phase_prefill"] == 1
+    assert s["miss_phase_decode_segment"] == 1
+    # ledger publishes into the shared registry
+    snap = reg.snapshot()
+    assert snap["slo.requests_met"] == 1
+    assert snap["slo.requests_missed"] == 2
+    assert snap["slo.goodput_tokens"] == 11
+
+    line = ledger.format_summary()
+    assert "attainment 33.3% (1/3)" in line
+    assert "goodput 1.1 tok/s (11/24 tokens in SLO)" in line
+    assert "ttft 2" in line and "queue_wait 1" in line
+
+
+def test_ledger_tpot_miss_attributed_to_prefill_interference():
+    # decode window [0.5s, 1.0s]; tpot 500ms vs 150ms limit -> overshoot
+    # 350ms; a concurrent 400ms prefill span covers it -> interference
+    m = _metrics({0: (0.0, 0.01, 0.5, 1.0, 2)})
+    tracer = types.SimpleNamespace(
+        enabled=True, origin=0.0,
+        events=[{"ph": "X", "name": "prefill",
+                 "ts": 550_000.0, "dur": 400_000.0}])
+    ledger = SLOLedger(SLO(tpot_ms=150.0))
+    v, = ledger.judge(m, tracer)
+    assert v.misses == {"tpot": "prefill"}
+    # same run, trace off: the span evidence is unavailable
+    ledger2 = SLOLedger(SLO(tpot_ms=150.0))
+    v2, = ledger2.judge(m, None)
+    assert v2.misses == {"tpot": "decode_segment"}
+
+
+def test_ledger_e2e_miss_attributed_to_largest_phase():
+    # queue 0.1s, prefill 0.2s (admit->first), decode 3.0s
+    m = _metrics({0: (0.0, 0.1, 0.3, 3.3, 4)})
+    ledger = SLOLedger(SLO(e2e_ms=1000.0))
+    v, = ledger.judge(m)
+    assert v.misses == {"e2e": "decode_segment"}
+
+
+def test_slo_parse():
+    slo = SLO.parse("ttft=200,tpot=25,e2e=2000")
+    assert (slo.ttft_ms, slo.tpot_ms, slo.e2e_ms) == (200.0, 25.0, 2000.0)
+    assert SLO.parse("ttft=200").tpot_ms is None
+    with pytest.raises(ValueError):
+        SLO.parse("latency=5")
+    with pytest.raises(ValueError):
+        SLO.parse("")
+
+
+# ---------------------------------------------------------------------------
+# timed admission through the real engine
+# ---------------------------------------------------------------------------
+
+def test_open_loop_engine_run_backdates_arrivals(tiny):
+    cfg, api, params = tiny
+    spec = WorkloadSpec(process="poisson", rate=100.0, requests=5,
+                        prompt_min=3, prompt_max=6, max_new_min=3,
+                        max_new_max=3, seed=0)
+    wl = generate(spec, cfg.vocab)
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(num_slots=2, max_seq=32),
+                          SamplingParams())
+    out = eng.run(source=make_source(wl))
+    m = eng.metrics
+    assert out["metrics"]["requests"] == 5
+    assert len(out["results"]) == 5
+    # submits happen in arrival order, so rid i is workload request i:
+    # every enqueue is backdated to exactly t0 + generated arrival
+    for i, g in enumerate(wl.requests):
+        rt = m.requests[i]
+        assert rt.finish_t > 0.0
+        assert rt.enqueue_t == pytest.approx(m.start_t + g.arrival_s,
+                                             abs=1e-9)
+        assert rt.admit_t >= rt.enqueue_t
+    # a generous SLO judges the whole run attained
+    ledger = SLOLedger(SLO.parse("ttft=60000,e2e=120000"))
+    ledger.judge(m)
+    s = ledger.summary()
+    assert s["attainment"] == 1.0
+    assert s["goodput_tokens"] == s["tokens"] == out["metrics"]["tokens"]
+
+
+def test_closed_loop_engine_run_completes_population(tiny):
+    cfg, api, params = tiny
+    spec = WorkloadSpec(process="closed", concurrency=2, think_s=0.0,
+                        requests=4, prompt_min=3, prompt_max=5,
+                        max_new_min=2, max_new_max=2, seed=1)
+    wl = generate(spec, cfg.vocab)
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(num_slots=2, max_seq=32),
+                          SamplingParams())
+    out = eng.run(source=make_source(wl))
+    assert out["metrics"]["requests"] == 4
+    # realized arrivals were stamped at run time, later users later
+    arrivals = [r.arrival_s for r in wl.requests]
+    assert all(a is not None for a in arrivals)
+    assert arrivals[:2] == [0.0, 0.0]
+    assert arrivals[2] > 0.0 and arrivals[3] >= arrivals[2]
