@@ -13,6 +13,7 @@ slots/requests/budgets on the reduced config; the acceptance bar is
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from typing import List
 
@@ -21,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
-                          Telemetry)
+from repro.engine import (EngineConfig, InferenceEngine, ResilienceConfig,
+                          SamplingParams, Telemetry)
 from repro.engine.loadgen import (SLO, SLOLedger, WorkloadSpec, generate,
                                   make_source)
 from repro.launch.serve import compressed_params, make_requests
@@ -236,6 +237,52 @@ def load_sweep_series(cfg, params, slots, max_seq, seed=0):
              goodput_tok_per_s=s["goodput_tok_per_s"])
 
 
+def overload_sweep_series(cfg, params, slots, max_seq, seed=0):
+    """Overload cliff (DESIGN.md §12): the same seeded workload offered
+    at rates up to far beyond sustainable, against a per-request TTFT
+    deadline and a KV pool sized for ~two resident requests. The ladder
+    (shed -> degrade -> preempt) turns saturation into bounded verdicts
+    instead of unbounded queue wait: goodput holds as offered load
+    climbs, the excess lands in ``sheds``. Sheds/preemptions ride as
+    machine-readable extras (unclassified by the regression gate —
+    counts, not timings); goodput/attainment stay timing-class."""
+    slo = SLO.parse("ttft=50")
+    rcfg = ResilienceConfig(deadline_ttft_ms=50.0)
+    # two priority bands: the high band preempts the low one under pool
+    # pressure, so the sweep exercises the whole ladder, not just sheds
+    wargs = dict(requests=64, prompt_min=4, prompt_max=10,
+                 max_new_min=6, max_new_max=12, priority_levels=2,
+                 seed=seed)
+    ecfg = EngineConfig(num_slots=slots, max_seq=max_seq, num_pages=3,
+                        resilience=rcfg)
+    # compile outside the recorded runs (same prompt-shape argument as
+    # the load sweep's warmup), without the deadline so every shape the
+    # swept runs can hit is actually reached
+    warm = generate(WorkloadSpec(process="poisson", rate=64.0, **wargs),
+                    cfg.vocab)
+    InferenceEngine(cfg, params,
+                    dataclasses.replace(ecfg, resilience=None),
+                    SamplingParams()).run(source=make_source(warm))
+    for rate in (8.0, 64.0, 2000.0):
+        wl = generate(WorkloadSpec(process="poisson", rate=rate, **wargs),
+                      cfg.vocab)
+        eng = InferenceEngine(cfg, params, ecfg, SamplingParams())
+        m = eng.run(source=make_source(wl))["metrics"]
+        ledger = SLOLedger(slo)
+        ledger.judge(eng.metrics)
+        s = ledger.summary()
+        emit(f"serve_overload_r{rate:g}",
+             m["seconds"] * 1e6 / max(m["tokens"], 1),
+             f"offered {wl.offered_rate:.0f} req/s -> goodput "
+             f"{s['goodput_tok_per_s']:.1f} tok/s, attainment "
+             f"{s['attainment']:.0%}, {s['shed']} shed, "
+             f"{int(m['preemptions'])} preempted",
+             offered_req_per_s=wl.offered_rate, tok_per_s=m["tok_per_s"],
+             goodput_tok_per_s=s["goodput_tok_per_s"],
+             attainment=s["attainment"], sheds=float(s["shed"]),
+             preemptions=float(m["preemptions"]))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--compress", default="gqsa,w4,none")
@@ -278,8 +325,11 @@ def main(argv=None):
     decode_attention_series(cfg)
     # load sweep on the paper configuration (GQSA-compressed serve)
     gq = argparse.Namespace(compress="gqsa", sparsity=0.5, group_size=16)
-    load_sweep_series(cfg, compressed_params(cfg, gq, jax.random.PRNGKey(0)),
-                      args.slots, args.max_seq, seed=args.seed)
+    gq_params = compressed_params(cfg, gq, jax.random.PRNGKey(0))
+    load_sweep_series(cfg, gq_params, args.slots, args.max_seq,
+                      seed=args.seed)
+    overload_sweep_series(cfg, gq_params, args.slots, args.max_seq,
+                          seed=args.seed)
     mla_series(slots=args.slots, requests=args.requests,
                max_new=args.max_new, max_seq=args.max_seq, seed=args.seed)
     print(f"# engine vs seed-loop speedups: "

@@ -29,6 +29,22 @@ delivered within SLO per second) and per-miss phase attribution:
     PYTHONPATH=src python -m repro.launch.serve \
         --workload 'process=poisson,rate=20,requests=16,prompt=4:12' \
         --slo ttft=500,tpot=50 --slo-json /tmp/slo.json
+
+Overload resilience (DESIGN.md §12): ``--deadline MS`` gives every
+request a TTFT deadline — queued requests that provably cannot meet it
+are shed pre-prefill and show up as first-class ``shed`` verdicts in
+the SLO ledger (distinct from ``miss``), while KV-pool pressure first
+degrades the speculative ladder and then preempts lower-priority slots
+losslessly (generated tokens fold into the prompt and re-prefill
+resumes bit-identically). ``--chaos SPEC`` injects seeded faults
+(alloc_fail / latency / device_err / nan_logits) to exercise those
+recovery paths; two runs with the same ``--seed`` replay bit-identically
+(compare the printed ``[digest]`` lines):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --workload 'process=poisson,rate=200,requests=32,prompt=4:12' \
+        --deadline 100 --slo ttft=100 \
+        --chaos alloc_fail=0.05,latency=0.02,nan_logits=0.05 --seed 11
 """
 import argparse
 

@@ -13,6 +13,8 @@ from repro.engine.kv_cache import PageAllocator, PagedKVCache
 from repro.engine.loadgen import (SLO, SLOLedger, Workload, WorkloadSpec,
                                   generate, make_source)
 from repro.engine.metrics import EngineMetrics
+from repro.engine.resilience import (ChaosConfig, RejectedRequest,
+                                     ResilienceConfig)
 from repro.engine.sampling import SamplingParams, sample, spec_verify
 from repro.engine.scheduler import Request, Scheduler
 from repro.engine.telemetry import (MetricsRegistry, SpanTracer,
@@ -23,4 +25,5 @@ __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "spec_verify", "Request", "Scheduler", "Telemetry",
            "MetricsRegistry", "SpanTracer", "StreamingHistogram",
            "WorkloadSpec", "Workload", "generate", "make_source", "SLO",
-           "SLOLedger"]
+           "SLOLedger", "ResilienceConfig", "ChaosConfig",
+           "RejectedRequest"]

@@ -34,6 +34,10 @@ import numpy as np
 
 from repro.engine.kv_cache import PagedKVCache
 from repro.engine.metrics import EngineMetrics
+from repro.engine.resilience import (ChaosDeviceError, PRESSURE_CRITICAL,
+                                     PRESSURE_ELEVATED, ResilienceConfig,
+                                     choose_victims, make_injector,
+                                     pressure_level)
 from repro.engine.sampling import SamplingParams, sample
 from repro.engine.scheduler import DECODE, Request, Scheduler
 from repro.engine.telemetry import Telemetry
@@ -49,6 +53,11 @@ class EngineConfig:
     prompt_bucket_min: int = 8        # prefill pad bucket floor (pow2 above)
     use_pallas: bool = False
     seed: int = 0
+    # overload resilience (engine/resilience/, DESIGN.md §12): preemption
+    # + shedding + pressure degrade + optional chaos injection. None uses
+    # the all-defaults ResilienceConfig (inert without priority
+    # inversions, deadlines or a chaos spec).
+    resilience: Optional[ResilienceConfig] = None
     # speculative decoding: draft K tokens per round with the (separately
     # compressed) draft parameter set, verify all K in one multi-token
     # target step. 0 disables; > 0 requires draft_params at engine
@@ -157,9 +166,11 @@ class InferenceEngine:
                 if engine_cfg.spec_adaptive else [fan]
             lookahead = full.n_nodes       # verify writes all N tree slots
             self._spec_width = full.depth + 1
+            self._tree_depth = full.depth
         else:
             lookahead = engine_cfg.spec_k
             self._spec_width = engine_cfg.spec_k + 1
+        self._full_lookahead = lookahead
         self._accept_ewma = np.full((engine_cfg.num_slots,),
                                     self.SPEC_EWMA_INIT)
         # observability (DESIGN.md §10): one registry shared by the KV
@@ -170,11 +181,16 @@ class InferenceEngine:
         self._c_retraces = reg.counter("jit.decode_retraces")
         self._c_ladder_flips = reg.counter("spec.ladder_transitions")
         self._g_ladder = reg.gauge("spec.ladder_rung")
+        self._c_degraded = reg.counter("resil.degraded_segments")
         self._ladder_rung: Optional[int] = None
+        self.rcfg = engine_cfg.resilience if engine_cfg.resilience \
+            is not None else ResilienceConfig()
+        self.chaos = make_injector(self.rcfg.chaos, reg)
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
                                engine_cfg.num_pages,
                                lookahead=lookahead, registry=reg)
+        self.kv.chaos = self.chaos
         self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
                                    engine_cfg.max_seq, registry=reg)
         self.metrics = EngineMetrics(registry=reg, tracer=self.tel.tracer)
@@ -201,15 +217,30 @@ class InferenceEngine:
     # -- API ----------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               arrival_t: Optional[float] = None) -> int:
+               arrival_t: Optional[float] = None, priority: int = 0,
+               deadline_t: Optional[float] = None) -> int:
         """Enqueue a request. ``arrival_t`` (a ``metrics.now()``-clock
         timestamp) backdates the enqueue to the request's TRUE arrival —
         the timed-admission loop polls its source at scheduling
         boundaries, so a request can arrive well before it is submitted,
         and queue wait / TTFT must be measured from arrival, not from
-        the boundary that happened to notice it."""
+        the boundary that happened to notice it.
+
+        ``priority``: admission band (higher served first; strictly
+        higher may preempt, DESIGN.md §12.1). ``deadline_t``: absolute
+        TTFT deadline on the metrics clock — a queued request past it is
+        shed instead of served (defaults from the resilience config's
+        ``deadline_ttft_ms``, measured from arrival). Malformed requests
+        raise :class:`~repro.engine.resilience.RejectedRequest` and are
+        never enqueued."""
+        if deadline_t is None and self.rcfg.deadline_ttft_ms is not None:
+            base = arrival_t if arrival_t is not None \
+                else self.metrics.now()
+            deadline_t = base + self.rcfg.deadline_ttft_ms / 1e3
         rid = self.scheduler.submit(prompt, max_new_tokens,
-                                    arrival_t=arrival_t)
+                                    arrival_t=arrival_t,
+                                    priority=priority,
+                                    deadline_t=deadline_t)
         self.metrics.record_enqueue(rid, t=arrival_t)
         return rid
 
@@ -233,51 +264,212 @@ class InferenceEngine:
         self._source = source
         self.metrics.run_started()
         t0 = self.metrics.start_t
-        while sch.has_work() or (source is not None
-                                 and not source.exhausted):
-            if source is not None:
-                now = self.metrics.now()
-                for g in source.due(now - t0):
-                    arr = t0 + g.arrival_s if g.arrival_s is not None \
-                        else now
-                    self.submit(g.prompt, g.max_new, arrival_t=arr)
-            with tracer.span("admit") as sp:
-                admitted = sch.admit()
-                sp.set(admitted=len(admitted),
-                       queue_depth=len(sch.waiting))
-            if admitted:
-                self._do_prefill(admitted)
-            actives = [r for r in sch.active() if r.state == DECODE]
-            if not actives:
-                if sch.waiting and not sch.active():
-                    head = sch.waiting[0]
-                    raise RuntimeError(
-                        f"request {head.rid} needs "
-                        f"{self.kv.pages_needed(head.total_tokens)} pages "
-                        f"but the pool only has {self.kv.num_pages}")
-                if source is not None and not sch.has_work():
-                    self._wait_for_arrival(source, t0)
-                continue
-            if self.spec:
-                finished = self._spec_segment(actives)
-            else:
-                finished = self._decode_segment(actives)
-            t = self.metrics.now()
-            with tracer.span("evict") as sp:
-                for r in finished:
-                    self.metrics.record_finish(r.rid, t, r.produced)
-                    sch.finish(r)
-                    if source is not None:
-                        source.on_finish(t - t0)
-                    # an evicted slot's acceptance history dies with it
-                    self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
-                if finished:
-                    self._sync_slot_state()
-                sp.set(evicted=len(finished))
-            self.tel.maybe_stats(self.metrics)
+        interrupted = False
+        try:
+            while sch.has_work() or (source is not None
+                                     and not source.exhausted):
+                sch.tick_quarantine()
+                if source is not None:
+                    now = self.metrics.now()
+                    for g in source.due(now - t0):
+                        arr = t0 + g.arrival_s if g.arrival_s is not None \
+                            else now
+                        self.submit(g.prompt, g.max_new, arrival_t=arr,
+                                    priority=getattr(g, "priority", 0))
+                self._shed_pass(t0)
+                if self.chaos is not None:
+                    spike = self.chaos.latency_spike_s()
+                    if spike > 0:
+                        time.sleep(spike)
+                la = self._admission_lookahead()
+                with tracer.span("admit") as sp:
+                    admitted = sch.admit(lookahead=la)
+                    preempted = self._maybe_preempt(la)
+                    if preempted:
+                        admitted += sch.admit(lookahead=la)
+                    sp.set(admitted=len(admitted), preempted=preempted,
+                           queue_depth=len(sch.waiting))
+                if admitted:
+                    self._do_prefill(admitted)
+                actives = [r for r in sch.active() if r.state == DECODE]
+                if not actives:
+                    if sch.waiting and not sch.active():
+                        head = sch.waiting[0]
+                        need = self.kv.pages_needed(head.total_tokens,
+                                                    lookahead=0)
+                        if need > self.kv.num_pages:
+                            # physically impossible, with the whole pool
+                            # free — not backpressure, a config error
+                            raise RuntimeError(
+                                f"request {head.rid} needs {need} pages "
+                                f"but the pool only has "
+                                f"{self.kv.num_pages}")
+                        # transient block (quarantined slots, injected
+                        # alloc failure): retry at the next boundary
+                        time.sleep(0.0005)
+                        continue
+                    if source is not None and not sch.has_work():
+                        self._wait_for_arrival(source, t0)
+                    continue
+                if self.chaos is not None \
+                        and self.chaos.cfg.nan_logits > 0:
+                    pre_prod = {r.rid: r.produced for r in actives}
+                else:
+                    pre_prod = None
+                if self.spec:
+                    finished = self._spec_segment(actives)
+                else:
+                    finished = self._decode_segment(actives)
+                if pre_prod is not None:
+                    finished = self._inject_nan(actives, finished,
+                                                pre_prod)
+                t = self.metrics.now()
+                with tracer.span("evict") as sp:
+                    for r in finished:
+                        self.metrics.record_finish(r.rid, t, r.produced)
+                        sch.finish(r)
+                        if source is not None:
+                            source.on_finish(t - t0)
+                        # an evicted slot's acceptance history dies with it
+                        self._accept_ewma[r.slot] = self.SPEC_EWMA_INIT
+                    if finished:
+                        self._sync_slot_state()
+                    sp.set(evicted=len(finished))
+                self.tel.maybe_stats(self.metrics)
+        except KeyboardInterrupt:
+            # graceful shutdown (DESIGN.md §12): shed the queue, account
+            # the in-flight requests with their tokens so far, free every
+            # page — the caller still gets results/metrics/trace flushed
+            interrupted = True
+            self._drain_on_interrupt()
         self.metrics.run_finished()
-        return {"results": self._materialize(), "metrics":
-                self.metrics.summary()}
+        out = {"results": self._materialize(), "metrics":
+               self.metrics.summary()}
+        if interrupted:
+            out["interrupted"] = True
+        return out
+
+    def _shed_pass(self, t0: float) -> None:
+        """Boundary shed: drop queued requests whose TTFT deadline has
+        already passed (first-class verdicts, DESIGN.md §12)."""
+        sch = self.scheduler
+        if not self.rcfg.shed or not sch.waiting:
+            return
+        now = self.metrics.now()
+        for r in sch.shed_expired(now):
+            self.metrics.record_shed(r.rid, now, "deadline")
+            if self._source is not None:   # keep closed loops flowing
+                self._source.on_finish(now - t0)
+
+    def _admission_lookahead(self) -> Optional[int]:
+        """Pressure-degraded admission (DESIGN.md §12.2): under KV-pool
+        pressure, new reservations shrink their speculative lookahead
+        (full -> chain K=1 -> none) so the pool serves more concurrent
+        requests before any preemption fires. None = the full default."""
+        if not self.spec or not self.rcfg.pressure_degrade:
+            return None
+        sch = self.scheduler
+        head_blocked = bool(sch.waiting) and not self.kv.can_admit(
+            sch.waiting[0].total_tokens)
+        lvl = pressure_level(self.kv, head_blocked,
+                             self.rcfg.pressure_occupancy)
+        if lvl == PRESSURE_CRITICAL:
+            return 0
+        if lvl == PRESSURE_ELEVATED:
+            return 1
+        return None
+
+    def _maybe_preempt(self, la: Optional[int]) -> int:
+        """KV-pressure preemption (DESIGN.md §12.1): the queue head has a
+        free slot but cannot reserve pages — release strictly-lower-
+        priority victims (their tokens fold into their prompts for
+        lossless recompute) until it can. Returns the victim count."""
+        sch = self.scheduler
+        if not self.rcfg.preempt or not sch.waiting:
+            return 0
+        slot_free = any(s.free and i not in sch._quarantine
+                        for i, s in enumerate(sch.slots))
+        la_eff = self.kv.lookahead if la is None else la
+        head = sch.waiting[0]
+        if not slot_free or self.kv.can_admit(head.total_tokens, la_eff):
+            return 0
+        running = [r for r in sch.active() if r.state == DECODE]
+        victims = choose_victims(head, running, self.kv, la_eff,
+                                 self.rcfg.max_preemptions)
+        for v in victims:
+            self._preempt_request(v, "kv_pressure")
+        return len(victims)
+
+    def _drain_on_interrupt(self) -> None:
+        """SIGINT landed mid-run: drop the queue (shed verdicts), account
+        every in-flight request's tokens so far, release all pages."""
+        sch = self.scheduler
+        t = self.metrics.now()
+        t0 = self.metrics.start_t or t
+        for r in sch.shed_all():
+            self.metrics.record_shed(r.rid, t, "shutdown")
+            if self._source is not None:
+                self._source.on_finish(t - t0)
+        for r in list(sch.active()):
+            if r.state == DECODE and r.produced > 0:
+                self.metrics.record_finish(r.rid, t, r.produced)
+            sch.finish(r)
+
+    def _request_tokens(self, r: Request) -> np.ndarray:
+        """Materialize the tokens ``r`` generated since its last fold
+        (host sync — preemption is a slow path, not the decode loop)."""
+        if not r.log_entries:
+            return np.zeros((0,), np.int32)
+        if self.spec:
+            parts = []
+            for i in r.log_entries:
+                toks, cnt = self._spec_log[i]
+                c = int(np.asarray(cnt)[r.slot])
+                if c > 0:
+                    parts.append(np.asarray(toks)[r.slot, :c])
+            out = np.concatenate(parts) if parts \
+                else np.zeros((0,), np.int32)
+        else:
+            mat = np.asarray(jnp.stack([self._token_log[i]
+                                        for i in r.log_entries]))
+            out = mat[:, r.slot]
+        return out[:r.produced - r.folded].astype(np.int32)
+
+    def _preempt_request(self, r: Request, reason: str) -> None:
+        """Preempt-and-recompute (DESIGN.md §12.1): fold the tokens
+        generated so far into the prompt and re-enqueue. Greedy prefill
+        over (prompt + generated) writes the exact K/V a continued
+        decode would have (the engine-vs-naive-forward parity test pins
+        this), so the re-prefill resumes the request losslessly —
+        bit-identical greedy outputs, pinned by test."""
+        r.prompt = np.concatenate([r.prompt, self._request_tokens(r)]) \
+            .astype(np.int32)
+        r.folded = r.produced
+        self.metrics.record_preempt(r.rid)
+        self.tel.tracer.instant("preempt", rid=r.rid, reason=reason)
+        self.scheduler.preempt(r)
+        self._sync_slot_state()
+
+    def _inject_nan(self, actives: List[Request], finished: List[Request],
+                    pre_prod: Dict[int, int]) -> List[Request]:
+        """Chaos ``nan_logits`` (DESIGN.md §12.3): a poisoned sampler for
+        one slot's segment. Recovery = drop the segment's tokens for
+        that slot (rewind to the pre-segment count; materialization
+        trims to ``produced``), quarantine the slot for a few
+        boundaries, and re-enqueue the request for lossless recompute —
+        greedy outputs stay bit-identical to a fault-free run."""
+        sch = self.scheduler
+        for r in actives:
+            if not self.chaos.fires("nan_logits"):
+                continue
+            r.produced = pre_prod[r.rid]
+            if r in finished:
+                finished.remove(r)
+            slot = r.slot
+            self._preempt_request(r, "nan_quarantine")
+            sch.quarantine_slot(slot,
+                                self.chaos.cfg.quarantine_boundaries)
+        return finished
 
     def _wait_for_arrival(self, source, t0: float) -> None:
         """Engine idle, stream not exhausted: sleep until the next
@@ -290,9 +482,36 @@ class InferenceEngine:
         if dt > 0:
             time.sleep(min(dt, 0.05))
 
+    def _dispatch(self, fn, *args):
+        """Dispatch one jitted step, with chaos device-error injection +
+        bounded exponential-backoff retry (the ``dist.fault.retrying``
+        discipline). Safe to retry unconditionally: every step is
+        functional — engine state is assigned only from its returns, so
+        a failed dispatch leaves nothing half-written."""
+        chaos = self.chaos
+        if chaos is None or chaos.cfg.device_err <= 0:
+            return fn(*args)
+        attempt = 0
+        while True:
+            try:
+                if chaos.fires("device_err"):
+                    raise ChaosDeviceError("chaos: injected device error")
+                return fn(*args)
+            except ChaosDeviceError:
+                attempt += 1
+                if attempt >= chaos.cfg.device_max_retries:
+                    raise
+                chaos.count_retry()
+                if chaos.cfg.device_backoff_s > 0:
+                    time.sleep(chaos.cfg.device_backoff_s
+                               * (2 ** (attempt - 1)))
+
     def _decode_segment(self, actives: List[Request]) -> List[Request]:
         """Plain decode segment: no slot can exceed its budget before the
-        earliest one finishes, so no host sync inside the segment."""
+        earliest one finishes, so no host sync inside the segment. Also
+        the floor of the spec degrade ladder — when a spec engine runs it
+        (some slot's reservation has no lookahead), tokens log into the
+        spec log (width 1) so materialization stays uniform."""
         sch = self.scheduler
         tracer = self.tel.tracer
         t0 = self.metrics.now()
@@ -302,12 +521,17 @@ class InferenceEngine:
             with tracer.annotate("decode_segment"):
                 for _ in range(seg):
                     self._tokens, self._positions, self.kv.data, \
-                        self._rng = self._decode_fn(
+                        self._rng = self._dispatch(
+                            self._decode_fn,
                             self.params, self.kv.data, self._tokens,
                             self._positions, self._block_tables,
                             self._active, self._rng, self._max_live)
-                    idx = len(self._token_log)
-                    self._token_log.append(self._tokens)
+                    if self.spec:
+                        idx = self._log_spec(self._tokens[:, None],
+                                             self._active)
+                    else:
+                        idx = len(self._token_log)
+                        self._token_log.append(self._tokens)
                     for r in sch.active():
                         r.log_entries.append(idx)
                     finished.extend(sch.step_decoded())
@@ -338,17 +562,37 @@ class InferenceEngine:
         sch = self.scheduler
         tracer = self.tel.tracer
         t0 = self.metrics.now()
+        # pressure degrade (DESIGN.md §12.2): the segment's speculative
+        # shape may not write past the SMALLEST lookahead reservation
+        # among its active slots — degraded admissions clamp the whole
+        # segment (to chain K=1, or to plain decode at lookahead 0)
+        seg_la = min(self.kv.slot_lookahead(r.slot) for r in actives)
+        if seg_la < self._full_lookahead:
+            self._c_degraded.inc()
+            if seg_la <= 0:
+                return self._decode_segment(actives)
         if self._spec_tree:
             from repro.engine.spec import tree_step_fns
-            fanout = self._segment_fanout()
+            if seg_la >= self._full_lookahead:
+                fanout = self._segment_fanout()
+            else:
+                # deepest chain whose tentative verify writes fit the
+                # smallest reservation
+                fanout = (1,) * min(seg_la, self._tree_depth)
             draft_fn, verify_fn, tpl = tree_step_fns(
                 self.cfg, self.sampling, self.ecfg.use_pallas, fanout,
                 self.ecfg.spec_draft_layers)
             k, width = tpl.depth, tpl.n_nodes + 1
             draft_dispatches = tpl.depth          # root + frontier calls
         else:
-            draft_fn, verify_fn = self._draft_fn, self._verify_fn
-            k = self.ecfg.spec_k
+            k = min(self.ecfg.spec_k, seg_la)
+            if k == self.ecfg.spec_k:
+                draft_fn, verify_fn = self._draft_fn, self._verify_fn
+            else:
+                from repro.engine.spec import spec_step_fns
+                draft_fn, verify_fn = spec_step_fns(
+                    self.cfg, self.sampling, self.ecfg.use_pallas, k,
+                    self.ecfg.spec_draft_layers)
             width = k + 1
             draft_dispatches = 1                  # one fused K-step call
         rounds = max(1, -(-min(r.remaining for r in actives) // (k + 1)))
@@ -361,14 +605,17 @@ class InferenceEngine:
                 # profiler annotations / named scopes
                 with tracer.span("draft", cat="dispatch"), \
                         tracer.annotate("draft"):
-                    draft = draft_fn(
+                    draft = self._dispatch(
+                        draft_fn,
                         self.draft_params, self.kv.data, self._tokens,
                         self._positions, self._block_tables,
                         self._max_live)
                 with tracer.span("verify", cat="dispatch"), \
                         tracer.annotate("verify"):
                     (out, n_new, self._tokens, self._positions,
-                     self._remaining, self.kv.data, self._rng) = verify_fn(
+                     self._remaining, self.kv.data, self._rng) = \
+                        self._dispatch(
+                        verify_fn,
                         self.params, self.kv.data, self._tokens, draft,
                         self._positions, self._block_tables, self._active,
                         self._remaining, self._rng, self._max_live)
@@ -468,7 +715,8 @@ class InferenceEngine:
             bt[r.slot] = self.kv.block_tables[r.slot]
             mask[r.slot] = True
         with tracer.span("prefill") as sp, tracer.annotate("prefill"):
-            first, self.kv.data, self._rng = self._prefill_fn(
+            first, self.kv.data, self._rng = self._dispatch(
+                self._prefill_fn,
                 self.params, self.kv.data, jnp.asarray(tokens),
                 jnp.asarray(lengths), jnp.asarray(bt), self._rng)
             jax.block_until_ready(first)
@@ -488,10 +736,13 @@ class InferenceEngine:
         done_now = []
         for r in admitted:
             r.state = DECODE
-            r.produced = 1                       # prefill produced token #1
+            # prefill produced the NEXT token: #1 for a fresh request,
+            # #folded+1 for a preempted one resuming from its folded
+            # prompt (produced == folded at re-admission)
+            r.produced += 1
             r.log_entries = [idx]
             self.metrics.record_first_token(r.rid, t)
-            if r.produced >= r.max_new_tokens:   # max_new_tokens == 1
+            if r.produced >= r.max_new_tokens:   # budget exhausted already
                 self.metrics.record_finish(r.rid, t, r.produced)
                 done_now.append(r)
         for r in done_now:
@@ -553,9 +804,14 @@ class InferenceEngine:
         for r in self.scheduler.finished:
             toks = mat[np.asarray(r.log_entries, np.int64), r.slot] \
                 if r.log_entries else np.zeros((0,), np.int32)
-            toks = toks[:r.produced]
+            toks = toks[:r.produced - r.folded]
+            if r.folded:
+                # tokens generated before a preemption live in the folded
+                # prompt — the output is their concatenation with the
+                # post-resume log (DESIGN.md §12.1)
+                toks = np.concatenate([r.prompt[r.orig_prompt_len:], toks])
             r.output = toks.astype(np.int32)
-            out.append({"rid": r.rid, "prompt_len": r.prompt_len,
+            out.append({"rid": r.rid, "prompt_len": r.orig_prompt_len,
                         "tokens": r.output, "n_generated": r.produced})
         return out
 
@@ -576,8 +832,10 @@ class InferenceEngine:
                     [mat[i, r.slot, :cnt[i, r.slot]] for i in r.log_entries])
             else:
                 toks = np.zeros((0,), np.int32)
-            toks = toks[:r.produced]
+            toks = toks[:r.produced - r.folded]
+            if r.folded:
+                toks = np.concatenate([r.prompt[r.orig_prompt_len:], toks])
             r.output = toks.astype(np.int32)
-            out.append({"rid": r.rid, "prompt_len": r.prompt_len,
+            out.append({"rid": r.rid, "prompt_len": r.orig_prompt_len,
                         "tokens": r.output, "n_generated": r.produced})
         return out

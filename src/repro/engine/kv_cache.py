@@ -8,6 +8,14 @@ stream through. Block-table entries that hold no page carry the
 out-of-range sentinel ``num_pages``: scatter-writes to a sentinel page are
 dropped by XLA and gather-reads clip (and are masked by the per-slot
 length), so inactive slots cost nothing and corrupt nothing.
+
+Resilience hooks (DESIGN.md §12): the allocator enforces its free-list
+invariants (double-free / out-of-range frees raise instead of silently
+corrupting the list — a preempt/re-admit storm must conserve ``num_free``
+exactly), reservations carry a per-slot speculative *lookahead* so
+admissions under pool pressure can reserve less than the full tree's
+tentative-verify pages, and ``assign`` consults an optional chaos
+injector to produce deterministic transient allocation failures.
 """
 from __future__ import annotations
 
@@ -17,20 +25,32 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.resilience.chaos import TransientAllocFailure
 from repro.engine.telemetry import MetricsRegistry
 
 
 class PageAllocator:
     """Free-list page allocator. O(1) alloc/free, pages are reused LIFO so
-    recently-touched pages (warm in cache) are handed out first."""
+    recently-touched pages (warm in cache) are handed out first.
+
+    Invariant-hardened: every page is either in the free list or in the
+    outstanding set, never both. ``free`` rejects double-frees and
+    out-of-range ids with :class:`ValueError` *before* touching the free
+    list, so a buggy caller cannot corrupt it (and ``num_free`` stays an
+    exact conservation law under preempt/re-admit churn)."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: deque = deque(range(num_pages))
+        self._outstanding: set = set()
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_outstanding(self) -> int:
+        return len(self._outstanding)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -39,9 +59,25 @@ class PageAllocator:
         if not self.can_alloc(n):
             raise RuntimeError(
                 f"out of KV pages: want {n}, have {len(self._free)}")
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        self._outstanding.update(pages)
+        return pages
 
     def free(self, pages: List[int]) -> None:
+        # validate the whole batch first: a partially-applied free would
+        # itself corrupt the invariant it exists to protect
+        for p in pages:
+            if not 0 <= p < self.num_pages:
+                raise ValueError(
+                    f"free of out-of-range page id {p} "
+                    f"(pool has {self.num_pages} pages)")
+            if p not in self._outstanding:
+                raise ValueError(
+                    f"double-free of page {p}: not outstanding "
+                    f"({len(self._outstanding)} pages are)")
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate page ids in free batch: {pages}")
+        self._outstanding.difference_update(pages)
         self._free.extend(pages)
 
 
@@ -73,7 +109,10 @@ class PagedKVCache:
         # tree additionally compacts the accepted path's K/V slots first;
         # the block table and the slot's page set never change
         # mid-request), so accept/reject churn can never leak or thrash
-        # pages.
+        # pages. Under pool pressure, admissions may reserve LESS than
+        # this full lookahead per slot (resilience degrade ladder,
+        # DESIGN.md §12.2); the engine then clamps each segment's spec
+        # shape to the smallest reservation among its active slots.
         self.lookahead = lookahead
         self.max_pages_per_slot = -(-(max_seq + lookahead) // page_size)
         # default pool: every slot can grow to max_seq simultaneously
@@ -85,6 +124,10 @@ class PagedKVCache:
         self.block_tables = np.full((num_slots, self.max_pages_per_slot),
                                     self.sentinel, np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        self._slot_lookahead = [lookahead] * num_slots
+        # deterministic fault injection (resilience chaos harness,
+        # DESIGN.md §12.3): set by the engine when a chaos spec is active
+        self.chaos = None
         # pool occupancy + free-list depth into the shared registry
         # (telemetry, DESIGN.md §10): the admission-backpressure signals
         # the chunked-prefill scheduler direction reads online
@@ -101,20 +144,34 @@ class PagedKVCache:
         self._g_free.set(free)
         self._g_occ.set(1.0 - free / max(self.num_pages, 1))
 
-    def pages_needed(self, n_tokens: int) -> int:
+    def pages_needed(self, n_tokens: int,
+                     lookahead: Optional[int] = None) -> int:
         """Worst-case pages for a request: prompt + budget + the
-        speculative lookahead (tentative verify writes past the budget)."""
-        return -(-(n_tokens + self.lookahead) // self.page_size)
+        speculative lookahead (tentative verify writes past the budget).
+        ``lookahead`` overrides the cache-wide default (pressure-degraded
+        admissions reserve less, DESIGN.md §12.2)."""
+        la = self.lookahead if lookahead is None else lookahead
+        return -(-(n_tokens + la) // self.page_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.allocator.can_alloc(self.pages_needed(n_tokens))
+    def can_admit(self, n_tokens: int,
+                  lookahead: Optional[int] = None) -> bool:
+        return self.allocator.can_alloc(
+            self.pages_needed(n_tokens, lookahead))
 
-    def assign(self, slot: int, n_tokens: int) -> None:
+    def assign(self, slot: int, n_tokens: int,
+               lookahead: Optional[int] = None) -> None:
         """Reserve pages for a request's full lifetime (prompt + budget
         + lookahead) — admission-time reservation means neither decode
-        nor a speculative verify write can ever hit OOM."""
-        pages = self.allocator.alloc(self.pages_needed(n_tokens))
+        nor a speculative verify write can ever hit OOM. Raises
+        :class:`TransientAllocFailure` (before touching the free list)
+        when the chaos harness injects an allocation fault."""
+        if self.chaos is not None and self.chaos.fires("alloc_fail"):
+            raise TransientAllocFailure(
+                f"chaos: transient page-alloc failure for slot {slot}")
+        la = self.lookahead if lookahead is None else lookahead
+        pages = self.allocator.alloc(self.pages_needed(n_tokens, la))
         self._slot_pages[slot] = pages
+        self._slot_lookahead[slot] = la
         self.block_tables[slot, :] = self.sentinel
         self.block_tables[slot, :len(pages)] = pages
         self._c_allocs.inc(len(pages))
@@ -124,8 +181,19 @@ class PagedKVCache:
         self._c_frees.inc(len(self._slot_pages[slot]))
         self.allocator.free(self._slot_pages[slot])
         self._slot_pages[slot] = []
+        self._slot_lookahead[slot] = self.lookahead
         self.block_tables[slot, :] = self.sentinel
         self._sync_gauges()
+
+    def slot_page_count(self, slot: int) -> int:
+        """Pages a preemption of this slot would return to the pool."""
+        return len(self._slot_pages[slot])
+
+    def slot_lookahead(self, slot: int) -> int:
+        """The speculative lookahead this slot's reservation covers —
+        the segment spec ladder may not exceed the minimum over its
+        active slots (DESIGN.md §12.2)."""
+        return self._slot_lookahead[slot]
 
     def device_block_tables(self) -> jnp.ndarray:
         return jnp.asarray(self.block_tables)

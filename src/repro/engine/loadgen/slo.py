@@ -77,6 +77,11 @@ class Verdict:
     met: bool = True
     # deadline -> attributed phase, e.g. {"ttft": "queue_wait"}
     misses: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # "met" | "miss" | "shed" — sheds are first-class outcomes
+    # (DESIGN.md §12): a dropped request is accounted, not forgotten,
+    # and met + miss + shed partitions every judged request
+    verdict: str = "met"
+    shed_reason: str = ""
 
 
 def _overlap_ms(events, name: str, lo_us: float, hi_us: float) -> float:
@@ -109,6 +114,7 @@ class SLOLedger:
             self._c_met = registry.counter("slo.requests_met")
             self._c_missed = registry.counter("slo.requests_missed")
             self._c_good = registry.counter("slo.goodput_tokens")
+            self._c_shed = registry.counter("slo.requests_shed")
 
     # -- judging --------------------------------------------------------
 
@@ -125,9 +131,23 @@ class SLOLedger:
         events = tracer.events if tracer is not None \
             and getattr(tracer, "enabled", False) else []
         origin = getattr(tracer, "origin", 0.0)
+        nan = float("nan")
         for rid, rt in sorted(metrics.requests.items()):
             if rt.finish_t <= 0.0:
-                continue                 # still in flight / never finished
+                if rt.shed_t <= 0.0:
+                    continue             # still in flight, never judged
+                # shed before service: no tokens, no latency to judge —
+                # but a first-class verdict (and an attainment hit)
+                v = Verdict(
+                    rid=rid, n_tokens=0, ttft_ms=nan, tpot_ms=nan,
+                    e2e_ms=nan,
+                    queue_wait_ms=(rt.shed_t - rt.enqueue_t) * 1e3,
+                    prefill_ms=nan, decode_ms=nan, met=False,
+                    verdict="shed", shed_reason=rt.shed_reason)
+                self.verdicts.append(v)
+                if self._reg is not None:
+                    self._c_shed.inc()
+                continue
             v = Verdict(
                 rid=rid, n_tokens=rt.n_generated,
                 ttft_ms=rt.ttft_s * 1e3,
@@ -171,12 +191,14 @@ class SLOLedger:
                       "decode_segment": v.decode_ms}
             v.misses["e2e"] = max(phases, key=phases.get)
         v.met = not v.misses
+        v.verdict = "met" if v.met else "miss"
 
     # -- aggregation ----------------------------------------------------
 
     def summary(self) -> Dict[str, float]:
         n = len(self.verdicts)
         met = sum(v.met for v in self.verdicts)
+        shed = sum(v.verdict == "shed" for v in self.verdicts)
         tokens = sum(v.n_tokens for v in self.verdicts)
         good = sum(v.n_tokens for v in self.verdicts if v.met)
         dt = max(self._seconds, 1e-9)
@@ -187,7 +209,7 @@ class SLOLedger:
             for phase in v.misses.values():
                 miss_by_phase[phase] = miss_by_phase.get(phase, 0) + 1
         return {
-            "requests": n, "met": met,
+            "requests": n, "met": met, "shed": shed,
             "attainment": met / n if n else float("nan"),
             "tokens": tokens, "goodput_tokens": good,
             "tok_per_s": tokens / dt,
@@ -206,6 +228,8 @@ class SLOLedger:
                 f"({s['met']}/{s['requests']}) | goodput "
                 f"{s['goodput_tok_per_s']:.1f} tok/s "
                 f"({s['goodput_tokens']}/{s['tokens']} tokens in SLO)")
+        if s["shed"]:
+            line += f" | shed {s['shed']}"
         misses = [f"{d} {s[f'missed_{d}']}" for d in DEADLINES
                   if s[f"missed_{d}"]]
         if misses:

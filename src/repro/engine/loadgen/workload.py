@@ -65,6 +65,11 @@ class WorkloadSpec:
     prefix_pool: int = 0                # 0 disables shared prefixes
     prefix_len: int = 0
     prefix_share: float = 0.0
+    # admission priority bands (DESIGN.md §12): 1 keeps every request at
+    # priority 0 (pure FIFO, the historical behaviour — and no rng draw,
+    # so existing specs regenerate bit-identically); > 1 draws each
+    # request's band uniformly from [0, priority_levels)
+    priority_levels: int = 1
     seed: int = 0
 
     def __post_init__(self):
@@ -89,6 +94,9 @@ class WorkloadSpec:
         if self.prefix_len > self.prompt_min:
             raise ValueError(f"prefix_len {self.prefix_len} exceeds "
                              f"prompt_min {self.prompt_min}")
+        if self.priority_levels < 1:
+            raise ValueError(f"priority_levels must be >= 1: "
+                             f"{self.priority_levels}")
 
     # -- (de)serialization ----------------------------------------------
 
@@ -149,6 +157,7 @@ class GeneratedRequest:
     prompt: np.ndarray                  # [prompt_len] int32
     max_new: int
     template: Optional[int] = None      # prefix-pool template id
+    priority: int = 0                   # admission band (higher wins)
 
 
 @dataclasses.dataclass
@@ -202,11 +211,15 @@ def generate(spec: WorkloadSpec, vocab: int) -> Workload:
             tid = int(rng.integers(0, len(templates)))
             body = body.copy()
             body[:spec.prefix_len] = templates[tid]
+        # drawn last (and only when bands are enabled) so single-band
+        # specs regenerate the exact historical streams
+        prio = (int(rng.integers(0, spec.priority_levels))
+                if spec.priority_levels > 1 else 0)
         out.append(GeneratedRequest(
             idx=i,
             arrival_s=None if np.isnan(arrivals[i]) else float(arrivals[i]),
             think_s=None if np.isnan(thinks[i]) else float(thinks[i]),
-            prompt=body, max_new=mnew, template=tid))
+            prompt=body, max_new=mnew, template=tid, priority=prio))
     return Workload(spec=spec, requests=out)
 
 

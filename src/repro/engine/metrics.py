@@ -30,6 +30,11 @@ class RequestTiming:
     first_token_t: float = 0.0       # TTFT reference: end of prefill
     finish_t: float = 0.0
     n_generated: int = 0
+    # load shedding (DESIGN.md §12): a shed request never finishes —
+    # ``shed_t`` set (with finish_t left 0) marks it for the SLO ledger's
+    # first-class ``shed`` verdict
+    shed_t: float = 0.0
+    shed_reason: str = ""
 
     @property
     def queue_wait_s(self) -> float:
@@ -91,6 +96,10 @@ class EngineMetrics:
         # TPOT per request divides by tokens arriving K+1 at a time)
         self._c_decode_time = r.counter("engine.decode_time_s")
         self._c_decode_tokens = r.counter("engine.decode_tokens")
+        # resilience (DESIGN.md §12): sheds and preemptions are outcomes
+        # a summary must account for, not silent drops
+        self._c_shed = r.counter("engine.requests_shed")
+        self._c_preemptions = r.counter("engine.preemptions")
         self._h_queue_wait = r.histogram("engine.queue_wait_ms")
         self._h_ttft = r.histogram("engine.ttft_ms")
         self._h_tpot = r.histogram("engine.tpot_ms")
@@ -138,6 +147,8 @@ class EngineMetrics:
     def record_admit(self, rid: int) -> None:
         t = self.now()
         rt = self.requests[rid]
+        if rt.admit_t > 0:
+            return       # re-admission after preemption: keep first admit
         rt.admit_t = t
         self._h_queue_wait.record(rt.queue_wait_s * 1e3)
         if self.tracer.enabled:
@@ -145,8 +156,27 @@ class EngineMetrics:
 
     def record_first_token(self, rid: int, t: float) -> None:
         rt = self.requests[rid]
+        if rt.first_token_t > 0:
+            return       # resumed re-prefill: TTFT is the FIRST token
         rt.first_token_t = t
         self._h_ttft.record(rt.ttft_s * 1e3)
+
+    def record_preempt(self, rid: int) -> None:
+        self._c_preemptions.inc()
+        if self.tracer.enabled:
+            self.tracer.flow_point(rid, "preempt")
+
+    def record_shed(self, rid: int, t: float, reason: str = "deadline") \
+            -> None:
+        """A queued request was dropped without service: marks the
+        timing record so the SLO ledger emits a ``shed`` verdict."""
+        rt = self.requests[rid]
+        rt.shed_t = t
+        rt.shed_reason = reason
+        self._c_shed.inc()
+        if self.tracer.enabled:
+            self.tracer.async_end("queue_wait", rid, t=t)
+            self.tracer.flow_point(rid, "shed", t=t, final=True)
 
     def record_finish(self, rid: int, t: float, n_generated: int) -> None:
         rt = self.requests[rid]
@@ -175,6 +205,8 @@ class EngineMetrics:
         slot_rounds = self._c_spec_slot_rounds.value
         return {
             "requests": self._c_finished.value,
+            "shed": self._c_shed.value,
+            "preemptions": self._c_preemptions.value,
             "tokens": toks,
             "seconds": dt,
             "tok_per_s": toks / max(dt, 1e-9),
@@ -217,6 +249,9 @@ class EngineMetrics:
                      f"acceptance {s['acceptance_rate']:.0%}, "
                      f"accepted/verify {s['accepted_len_mean']:.2f}, "
                      f"ITL {s['itl_ms_mean']:.2f}ms")
+        if s["shed"] or s["preemptions"]:
+            line += (f" | resil: {int(s['shed'])} shed, "
+                     f"{int(s['preemptions'])} preempted")
         return line
 
     def format_stats(self, interval=None) -> str:

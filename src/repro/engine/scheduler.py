@@ -1,31 +1,46 @@
-"""Task-centric continuous-batching scheduler (DESIGN.md §3.3).
+"""Task-centric continuous-batching scheduler (DESIGN.md §3.3, §12).
 
 Request lifecycle::
 
     QUEUED --admit--> PREFILL --first token--> DECODE --budget--> FINISHED
-              ^                                           |
-              '------------- slot + pages freed ----------'
+      ^  ^                                        |
+      |  '------------- preempt (pages freed, ----'
+      |                  tokens folded into prompt)
+      '--- submit                                 QUEUED --deadline--> SHED
 
-Admission is strict FIFO: the head of the queue is admitted as soon as a
-slot AND its full page reservation (prompt + generation budget) are
-available; if the head doesn't fit, nothing behind it jumps ahead
-(no head-of-line bypass — arrival order is the service order, pinned by a
-regression test). Slots are evicted and refilled without stopping the
-decode loop: the other slots keep decoding through every admission.
+Admission is FIFO within a priority band: the head of the queue is
+admitted as soon as a slot AND its full page reservation (prompt +
+generation budget + lookahead) are available; if the head doesn't fit,
+nothing behind it jumps ahead (no head-of-line bypass — arrival order is
+the service order within a band, pinned by a regression test). All
+requests default to priority 0, so the historical pure-FIFO behaviour is
+unchanged unless a workload opts into priorities. Slots are evicted and
+refilled without stopping the decode loop: the other slots keep decoding
+through every admission.
+
+Resilience extensions (DESIGN.md §12): ``preempt`` returns a victim's
+pages and re-enqueues it ahead of later same-band arrivals (its original
+rid keeps its place), ``shed_expired`` drops queued requests whose TTFT
+deadline already passed before prefill was dispatched, quarantined slots
+sit out admission for a few boundaries after a poisoned-sampler fault,
+and malformed submissions raise a typed :class:`RejectedRequest` instead
+of failing deep inside prefill.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.engine.kv_cache import PagedKVCache
+from repro.engine.resilience import RejectedRequest, TransientAllocFailure
 from repro.engine.telemetry import MetricsRegistry
 
-QUEUED, PREFILL, DECODE, FINISHED = "queued", "prefill", "decode", "finished"
+QUEUED, PREFILL, DECODE, FINISHED, SHED = (
+    "queued", "prefill", "decode", "finished", "shed")
 
 
 @dataclasses.dataclass
@@ -49,15 +64,33 @@ class Request:
     # may have arrived well before submit() ran — queue wait and TTFT
     # are measured from here (None: arrival == submit, the offline path)
     arrival_t: Optional[float] = None
+    # resilience (DESIGN.md §12): admission priority band (higher wins;
+    # preemption requires a strict inversion), optional absolute TTFT
+    # deadline on the metrics clock, and preempt-and-recompute state —
+    # ``folded`` counts already-generated tokens folded into ``prompt``
+    # so a re-prefill resumes the request exactly where it stopped
+    priority: int = 0
+    deadline_t: Optional[float] = None
+    preemptions: int = 0
+    folded: int = 0
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
     @property
+    def orig_prompt_len(self) -> int:
+        """Length of the prompt as submitted (before any preemption
+        folded generated tokens into it)."""
+        return self.prompt_len - self.folded
+
+    @property
     def total_tokens(self) -> int:
-        """Worst-case KV footprint: prompt + full generation budget."""
-        return self.prompt_len + self.max_new_tokens
+        """Worst-case KV footprint: original prompt + full generation
+        budget. Invariant under preemption: folding moves tokens from
+        the "to generate" side to the prompt side, but the positions the
+        request will ever write are the same."""
+        return self.prompt_len + self.max_new_tokens - self.folded
 
     @property
     def remaining(self) -> int:
@@ -66,6 +99,12 @@ class Request:
         drafts (the round always emits >= 1 token), and the device clamps
         acceptance to exactly this many tokens."""
         return max(self.max_new_tokens - self.produced, 0)
+
+    def sort_key(self):
+        """Queue order: priority band first (higher served earlier),
+        then rid — a preempted request keeps its original rid, so it
+        re-enters ahead of everything that arrived after it."""
+        return (-self.priority, self.rid)
 
 
 @dataclasses.dataclass
@@ -88,6 +127,10 @@ class Scheduler:
         self._ids = itertools.count()
         self.admission_order: List[int] = []   # rids, in service order
         self.finished: List[Request] = []
+        self.shed: List[Request] = []
+        # slot id -> scheduling boundaries left in quarantine (poisoned
+        # sampler cooldown, DESIGN.md §12.3)
+        self._quarantine: Dict[int, int] = {}
         # queue depth / admissions / evictions into the shared registry
         # (telemetry, DESIGN.md §10)
         reg = registry if registry is not None else MetricsRegistry()
@@ -96,6 +139,10 @@ class Scheduler:
         self._c_submitted = reg.counter("sched.submitted")
         self._c_admissions = reg.counter("sched.admissions")
         self._c_evictions = reg.counter("sched.evictions")
+        self._c_rejected = reg.counter("sched.rejected")
+        self._c_shed = reg.counter("sched.shed")
+        self._c_preemptions = reg.counter("sched.preemptions")
+        self._c_quarantines = reg.counter("sched.quarantines")
 
     def _sync_gauges(self) -> None:
         self._g_queue.set(len(self.waiting))
@@ -104,41 +151,131 @@ class Scheduler:
     # -- queue side ---------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               arrival_t: Optional[float] = None) -> int:
-        req = Request(rid=next(self._ids),
-                      prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=int(max_new_tokens),
-                      arrival_t=arrival_t)
+               arrival_t: Optional[float] = None, priority: int = 0,
+               deadline_t: Optional[float] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        max_new_tokens = int(max_new_tokens)
+        # typed rejection BEFORE the request enters the queue: a request
+        # that can never be served must not cost a slot, pages, or a
+        # prefill dispatch to discover that (DESIGN.md §12)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            self._c_rejected.inc()
+            raise RejectedRequest(
+                f"empty or non-1D prompt (shape {prompt.shape})")
+        if max_new_tokens <= 0:
+            self._c_rejected.inc()
+            raise RejectedRequest(
+                f"max_new_tokens must be positive, got {max_new_tokens}")
+        if prompt.shape[0] >= self.max_seq:
+            self._c_rejected.inc()
+            raise RejectedRequest(
+                f"prompt length {prompt.shape[0]} leaves no room to "
+                f"generate within max_seq {self.max_seq}")
+        req = Request(rid=next(self._ids), prompt=prompt,
+                      max_new_tokens=max_new_tokens, arrival_t=arrival_t,
+                      priority=int(priority), deadline_t=deadline_t)
         if req.total_tokens > self.max_seq:
-            raise ValueError(
+            self._c_rejected.inc()
+            raise RejectedRequest(
                 f"request {req.rid}: prompt+budget {req.total_tokens} "
                 f"exceeds max_seq {self.max_seq}")
-        self.waiting.append(req)               # FIFO: append at the tail...
+        self._enqueue(req)
         self._c_submitted.inc()
         self._sync_gauges()
         return req.rid
 
+    def _enqueue(self, req: Request) -> None:
+        """Insert keeping the queue sorted by (priority band, rid). The
+        common case — everything priority 0, fresh rid — is a pure
+        append, preserving the historical FIFO behaviour."""
+        key = req.sort_key()
+        if not self.waiting or self.waiting[-1].sort_key() < key:
+            self.waiting.append(req)
+            return
+        for i, w in enumerate(self.waiting):
+            if key < w.sort_key():
+                self.waiting.insert(i, req)
+                return
+        self.waiting.append(req)
+
     def has_work(self) -> bool:
         return bool(self.waiting) or any(not s.free for s in self.slots)
 
+    def shed_expired(self, now: float) -> List[Request]:
+        """Drop queued requests whose TTFT deadline has already passed:
+        prefill hasn't been dispatched, so TTFT >= now - arrival and the
+        deadline is provably unmeetable — spending prefill FLOPs on the
+        request only steals them from ones that can still meet theirs.
+        Returns the shed requests (state SHED); the engine turns them
+        into first-class SLO verdicts."""
+        dropped = [r for r in self.waiting
+                   if r.deadline_t is not None and now >= r.deadline_t]
+        if dropped:
+            keep = [r for r in self.waiting
+                    if r.deadline_t is None or now < r.deadline_t]
+            self.waiting = deque(keep)
+            for r in dropped:
+                r.state = SHED
+                self.shed.append(r)
+            self._c_shed.inc(len(dropped))
+            self._sync_gauges()
+        return dropped
+
+    def shed_all(self) -> List[Request]:
+        """Drop every queued request (graceful shutdown): the queue will
+        never be served, so each entry becomes a shed verdict."""
+        dropped = list(self.waiting)
+        self.waiting.clear()
+        for r in dropped:
+            r.state = SHED
+            self.shed.append(r)
+        if dropped:
+            self._c_shed.inc(len(dropped))
+            self._sync_gauges()
+        return dropped
+
     # -- slot side ----------------------------------------------------------
 
-    def admit(self) -> List[Request]:
+    def quarantine_slot(self, slot: int, boundaries: int) -> None:
+        """Take a slot out of admission rotation for ``boundaries``
+        scheduling boundaries (poisoned-sampler cooldown)."""
+        self._quarantine[slot] = max(self._quarantine.get(slot, 0),
+                                     int(boundaries))
+        self._c_quarantines.inc()
+
+    def tick_quarantine(self) -> None:
+        """One scheduling boundary elapsed: count quarantines down."""
+        for slot in list(self._quarantine):
+            self._quarantine[slot] -= 1
+            if self._quarantine[slot] <= 0:
+                del self._quarantine[slot]
+
+    def admit(self, lookahead: Optional[int] = None) -> List[Request]:
         """Move queue-head requests into free slots while pages last.
 
-        Returns the newly admitted requests (state PREFILL, slot set).
-        Stops at the first request that doesn't fit — FIFO order is the
-        service order, so nothing bypasses a blocked head (backpressure).
+        ``lookahead`` overrides the cache-wide speculative lookahead for
+        these reservations (pressure degrade, DESIGN.md §12.2); None
+        reserves the full default. Returns the newly admitted requests
+        (state PREFILL, slot set). Stops at the first request that
+        doesn't fit — within a priority band arrival order is the
+        service order, so nothing bypasses a blocked head
+        (backpressure) — and at the first injected transient allocation
+        failure (the head stays queued and retries next boundary).
         """
         admitted: List[Request] = []
-        free_slots = [i for i, s in enumerate(self.slots) if s.free]
+        free_slots = [i for i, s in enumerate(self.slots)
+                      if s.free and i not in self._quarantine]
         while self.waiting and free_slots:
-            head = self.waiting[0]             # ...and serve from the head
-            if not self.kv.can_admit(head.total_tokens):
+            head = self.waiting[0]             # serve from the head
+            if not self.kv.can_admit(head.total_tokens, lookahead):
                 break                          # out-of-pages backpressure
+            slot = free_slots[0]
+            try:
+                self.kv.assign(slot, head.total_tokens, lookahead)
+            except TransientAllocFailure:
+                break                          # chaos: retry next boundary
             self.waiting.popleft()
-            slot = free_slots.pop(0)
-            self.kv.assign(slot, head.total_tokens)
+            free_slots.pop(0)
             head.state = PREFILL
             head.slot = slot
             self.slots[slot].request = head
@@ -214,4 +351,22 @@ class Scheduler:
         req.state = FINISHED
         self.finished.append(req)
         self._c_evictions.inc()
+        self._sync_gauges()
+
+    def preempt(self, req: Request) -> None:
+        """Release a running request's slot and pages and re-enqueue it.
+        The caller (engine) has already folded the generated tokens into
+        ``req.prompt`` (DESIGN.md §12.1), so the re-prefill resumes it
+        losslessly; its original rid puts it back ahead of later
+        arrivals in its priority band."""
+        slot = req.slot
+        self.kv.release(slot)
+        self.slots[slot].request = None
+        self.slots[slot].position = 0
+        req.slot = None
+        req.state = QUEUED
+        req.preemptions += 1
+        req.log_entries = []
+        self._enqueue(req)
+        self._c_preemptions.inc()
         self._sync_gauges()

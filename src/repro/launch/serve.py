@@ -24,6 +24,7 @@ request against TTFT/TPOT/e2e deadlines — printing attainment, goodput
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import time
 from typing import List
@@ -37,8 +38,8 @@ from repro.core.model_compress import (compress_draft, compress_params,
                                        compress_params_w4, draft_layers)
 from repro.core.pruning import PruneConfig
 from repro.core.quant import QuantConfig
-from repro.engine import (EngineConfig, InferenceEngine, SamplingParams,
-                          Telemetry)
+from repro.engine import (ChaosConfig, EngineConfig, InferenceEngine,
+                          ResilienceConfig, SamplingParams, Telemetry)
 from repro.engine.loadgen import SLO, SLOLedger, generate, make_source
 from repro.engine.loadgen import WorkloadSpec
 from repro.models.registry import get_model
@@ -138,6 +139,19 @@ def main(argv=None):
     ap.add_argument("--slo-json", default=None, metavar="OUT.json",
                     help="also write the SLO ledger (summary + "
                          "per-request verdicts) as JSON")
+    ap.add_argument("--deadline", type=float, default=None, metavar="MS",
+                    help="per-request TTFT deadline (ms from arrival): "
+                         "queued requests past it are SHED before "
+                         "prefill instead of served late (first-class "
+                         "SLO verdicts, DESIGN.md §12)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection: k=v rates per "
+                         "injection-point visit ('alloc_fail=0.05,"
+                         "latency=0.02,device_err=0.01,nan_logits=0.01' "
+                         "— any subset, plus latency_spike_ms/retries/"
+                         "backoff_ms/quarantine knobs), seeded by "
+                         "--seed; same seed + same spec replays "
+                         "bit-identically (offline mode)")
     args = ap.parse_args(argv)
 
     workload_spec = None
@@ -154,6 +168,14 @@ def main(argv=None):
             ap.error(f"--slo: {e}")
     if args.slo_json and slo is None:
         ap.error("--slo-json requires --slo")
+    chaos = None
+    if args.chaos is not None:
+        try:
+            chaos = ChaosConfig.parse(args.chaos, seed=args.seed)
+        except ValueError as e:
+            ap.error(f"--chaos: {e}")
+    resilience = ResilienceConfig(deadline_ttft_ms=args.deadline,
+                                  chaos=chaos)
 
     spec_fanout = None
     if args.spec_tree:
@@ -203,7 +225,8 @@ def main(argv=None):
                      use_pallas=args.use_pallas, seed=args.seed,
                      spec_k=args.spec, spec_draft_layers=dlayers,
                      spec_fanout=spec_fanout,
-                     spec_adaptive=args.spec_adaptive),
+                     spec_adaptive=args.spec_adaptive,
+                     resilience=resilience),
         SamplingParams(temperature=args.temperature, top_k=args.top_k,
                        top_p=args.top_p),
         draft_params=draft_params, telemetry=telemetry)
@@ -239,6 +262,25 @@ def main(argv=None):
     m = out["metrics"]
     print(engine.metrics.format_summary()
           + f" ({args.slots} slots, {m['decode_steps']} decode steps)")
+    if out.get("interrupted"):
+        print("[interrupted] graceful drain: queue shed, in-flight "
+              "requests accounted, all pages freed")
+    # results digest: sha256 over (rid, tokens) in rid order — the replay
+    # pin the CI chaos smoke compares across two identically-seeded runs
+    h = hashlib.sha256()
+    for r in sorted(out["results"], key=lambda d: d["rid"]):
+        h.update(np.int64(r["rid"]).tobytes())
+        h.update(np.asarray(r["tokens"], np.int32).tobytes())
+    print(f"[digest] {h.hexdigest()}")
+    if engine.chaos is not None:
+        snap = engine.chaos.snapshot()
+        retries = int(telemetry.registry.counter(
+            "chaos.device_retries").value)
+        print("[chaos] injected "
+              + " ".join(f"{k}={v}" for k, v in sorted(snap.items()))
+              + f" device_retries={retries} | recovered: "
+              f"{int(m['preemptions'])} preemptions, "
+              f"{int(m['shed'])} shed")
     slo_summary = None
     if slo is not None:
         ledger = SLOLedger(slo, registry=telemetry.registry)
@@ -250,6 +292,7 @@ def main(argv=None):
                            if slo.limit(d) is not None},
                    "summary": slo_summary,
                    "requests": [{"rid": v.rid, "met": v.met,
+                                 "verdict": v.verdict,
                                  "n_tokens": v.n_tokens,
                                  "ttft_ms": round(v.ttft_ms, 3),
                                  # single-token requests have no TPOT

@@ -1,0 +1,491 @@
+"""Overload resilience (DESIGN.md §12): allocator invariants, typed
+submit rejection, KV-pressure preemption with lossless recompute (plain,
+chain-spec and tree-spec), deadline shedding as first-class SLO verdicts,
+pressure-degraded spec admission, the deterministic chaos harness
+(bit-identical replay + greedy losslessness under faults), the overload
+cliff, and graceful SIGINT shutdown."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import (EngineConfig, InferenceEngine, PageAllocator,
+                          PagedKVCache, RejectedRequest, SamplingParams,
+                          Scheduler)
+from repro.engine.loadgen import (SLO, ArrivalSource, GeneratedRequest,
+                                  SLOLedger, WorkloadSpec, generate,
+                                  make_source)
+from repro.engine.resilience import ChaosConfig, ResilienceConfig
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, api, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
+
+
+def _by_rid(res):
+    return {r["rid"]: list(r["tokens"]) for r in res["results"]}
+
+
+class ScriptedSource(ArrivalSource):
+    """Poll-count-scheduled arrivals: request i is delivered at the
+    engine's N-th poll of the source, independent of wall clock — the
+    engine polls once per scheduling boundary, so mid-run arrivals land
+    at deterministic boundaries and preemption tests replay exactly."""
+
+    def __init__(self, schedule):
+        # schedule: [(poll_index, prompt, max_new, priority), ...]
+        self._sched = sorted(schedule, key=lambda s: s[0])
+        self._polls = 0
+        self._i = 0
+
+    def due(self, now_s):
+        self._polls += 1
+        out = []
+        while (self._i < len(self._sched)
+               and self._sched[self._i][0] <= self._polls):
+            _, prompt, max_new, prio = self._sched[self._i]
+            out.append(GeneratedRequest(
+                idx=self._i, arrival_s=None, think_s=None,
+                prompt=prompt, max_new=max_new, priority=prio))
+            self._i += 1
+        return out
+
+    def next_at(self):
+        return None
+
+    @property
+    def exhausted(self):
+        return self._i >= len(self._sched)
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_allocator_rejects_double_free():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free(pages)                     # already back in the free list
+    assert a.num_free == 4 and a.num_outstanding == 0
+
+
+def test_allocator_rejects_out_of_range_and_duplicates():
+    a = PageAllocator(4)
+    pages = a.alloc(3)
+    with pytest.raises(ValueError):
+        a.free([99])
+    with pytest.raises(ValueError):
+        a.free([pages[0], pages[0]])
+    # failed frees must not have partially applied
+    assert a.num_free == 1 and a.num_outstanding == 3
+    a.free(pages)
+    assert a.num_free == 4
+
+
+def test_allocator_conservation_under_storm():
+    """Randomized alloc/free churn (a preempt/re-admit storm in
+    miniature): free + outstanding == pool size at every step, and a
+    final drain returns every page exactly once."""
+    rng = np.random.default_rng(42)
+    a = PageAllocator(16)
+    held = []
+    for _ in range(500):
+        if held and (rng.random() < 0.5 or a.num_free == 0):
+            a.free(held.pop(int(rng.integers(0, len(held)))))
+        else:
+            n = int(rng.integers(1, min(a.num_free, 4) + 1))
+            held.append(a.alloc(n))
+        assert a.num_free + a.num_outstanding == 16
+    for pages in held:
+        a.free(pages)
+    assert a.num_free == 16 and a.num_outstanding == 0
+    assert sorted(a.alloc(16)) == list(range(16))
+
+
+# ---------------------------------------------------------------------------
+# typed submit rejection (satellite b)
+# ---------------------------------------------------------------------------
+
+def test_submit_validation_rejects_malformed(tiny):
+    cfg, api, params = tiny
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(num_slots=1, max_seq=16, page_size=4))
+    with pytest.raises(RejectedRequest):
+        eng.submit(np.zeros(0, np.int32), 4)          # empty prompt
+    with pytest.raises(RejectedRequest):
+        eng.submit(np.zeros(4, np.int32), 0)          # no budget
+    with pytest.raises(RejectedRequest):
+        eng.submit(np.zeros(16, np.int32), 4)         # prompt fills max_seq
+    with pytest.raises(RejectedRequest):
+        eng.submit(np.zeros(14, np.int32), 4)         # prompt+budget > cap
+    # RejectedRequest subclasses ValueError (compat with older callers)
+    assert issubclass(RejectedRequest, ValueError)
+    assert eng.tel.registry.counter("sched.rejected").value == 4
+    assert not eng.scheduler.waiting        # nothing entered the queue
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-recompute: lossless under greedy (tentpole, part 1)
+# ---------------------------------------------------------------------------
+
+def _preempt_schedule(vocab):
+    """A (prio 0, long) + C (prio 0, short) arrive first and fill the
+    pool; B (prio 1, biggest) arrives once decoding is underway and can
+    only be served by preempting A."""
+    pa, pc, pb = _prompts(vocab, (8, 8, 8), seed=21)
+    return [(1, pa, 16, 0), (1, pc, 4, 0), (2, pb, 24, 1)]
+
+
+def _run_scripted(cfg, params, schedule, draft=None, **ecfg):
+    eng = InferenceEngine(
+        cfg, params, EngineConfig(num_slots=2, max_seq=32, page_size=4,
+                                  **ecfg),
+        SamplingParams(), draft_params=draft)
+    res = eng.run(source=ScriptedSource(schedule))
+    return eng, res
+
+
+def test_preemption_lossless_plain(tiny):
+    """Pool sized so B (higher priority) can only run by preempting A;
+    A's re-prefill over (prompt + generated) must resume it exactly —
+    greedy outputs bit-identical to an ample-pool run with no
+    preemption, and every page returns to the pool."""
+    cfg, api, params = tiny
+    sched = _preempt_schedule(cfg.vocab)
+    base_eng, base = _run_scripted(cfg, params, sched)      # ample pool
+    assert base["metrics"]["preemptions"] == 0
+    eng, res = _run_scripted(cfg, params, sched, num_pages=9)
+    assert eng.scheduler.finished and len(res["results"]) == 3
+    assert res["metrics"]["preemptions"] == 1
+    preempted = [r for r in eng.scheduler.finished if r.preemptions]
+    assert len(preempted) == 1 and preempted[0].folded > 0
+    assert _by_rid(res) == _by_rid(base)                    # lossless
+    # folding never distorts the reported shapes
+    for r in res["results"]:
+        assert len(r["tokens"]) == r["n_generated"]
+        assert r["prompt_len"] == 8
+    assert eng.kv.allocator.num_free == 9                   # no page leak
+    assert eng.kv.allocator.num_outstanding == 0
+
+
+@pytest.fixture(scope="module")
+def draft(tiny):
+    from repro.core.model_compress import compress_draft
+    cfg, api, params = tiny
+    return compress_draft(params, cfg, profile="w4")
+
+
+def test_preemption_lossless_chain_spec(tiny, draft):
+    """Same inversion under chain speculative decoding: the spec log's
+    per-round accepted slices fold into the prompt correctly."""
+    cfg, api, params = tiny
+    sched = _preempt_schedule(cfg.vocab)
+    rcfg = ResilienceConfig(pressure_degrade=False)   # pin the preempt path
+    _, base = _run_scripted(cfg, params, sched, draft=draft, spec_k=2,
+                            resilience=rcfg)
+    assert base["metrics"]["preemptions"] == 0
+    eng, res = _run_scripted(cfg, params, sched, draft=draft, spec_k=2,
+                             num_pages=11, resilience=rcfg)
+    assert res["metrics"]["preemptions"] >= 1
+    assert _by_rid(res) == _by_rid(base)
+    assert eng.kv.allocator.num_free == 11
+
+
+def test_preemption_lossless_tree_spec(tiny, draft):
+    """And under token-TREE drafting (the widest spec log layout)."""
+    cfg, api, params = tiny
+    sched = _preempt_schedule(cfg.vocab)
+    rcfg = ResilienceConfig(pressure_degrade=False)
+    _, base = _run_scripted(cfg, params, sched, draft=draft,
+                            spec_fanout=(2,), resilience=rcfg)
+    assert base["metrics"]["preemptions"] == 0
+    eng, res = _run_scripted(cfg, params, sched, draft=draft,
+                             spec_fanout=(2,), num_pages=11,
+                             resilience=rcfg)
+    assert res["metrics"]["preemptions"] >= 1
+    assert _by_rid(res) == _by_rid(base)
+    assert eng.kv.allocator.num_free == 11
+
+
+def test_equal_priority_never_preempts(tiny):
+    """Plain overload (everything priority 0) must queue, not thrash:
+    FIFO means every running request arrived before the blocked head."""
+    cfg, api, params = tiny
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(num_slots=2, max_seq=32, page_size=4,
+                                       num_pages=9))
+    for p in _prompts(cfg.vocab, (8, 8, 8), seed=4):
+        eng.submit(p, 16)                    # 6 pages each: one at a time
+    res = eng.run()
+    assert len(res["results"]) == 3
+    assert res["metrics"]["preemptions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware shedding (tentpole, part 2)
+# ---------------------------------------------------------------------------
+
+def test_shed_expired_first_class_verdicts(tiny):
+    """Requests whose TTFT deadline already passed are dropped before
+    prefill and show up as 'shed' verdicts — met + miss + shed
+    partitions the run."""
+    cfg, api, params = tiny
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(num_slots=2, max_seq=16, page_size=4))
+    past = eng.metrics.now() - 1.0
+    live = [eng.submit(p, 4) for p in _prompts(cfg.vocab, (4, 6, 5))]
+    dead = [eng.submit(p, 4, deadline_t=past)
+            for p in _prompts(cfg.vocab, (5, 7), seed=2)]
+    res = eng.run()
+    assert sorted(r["rid"] for r in res["results"]) == sorted(live)
+    assert res["metrics"]["shed"] == 2
+    ledger = SLOLedger(SLO(ttft_ms=60_000), registry=eng.tel.registry)
+    ledger.judge(eng.metrics)
+    s = ledger.summary()
+    assert s["requests"] == 5 and s["shed"] == 2 and s["met"] == 3
+    by = {v.rid: v for v in ledger.verdicts}
+    for rid in dead:
+        v = by[rid]
+        assert v.verdict == "shed" and not v.met and v.n_tokens == 0
+        assert v.shed_reason == "deadline" and v.queue_wait_ms >= 0
+    for rid in live:
+        assert by[rid].verdict == "met"
+    assert eng.tel.registry.counter("slo.requests_shed").value == 2
+    assert eng.kv.allocator.num_free == eng.kv.num_pages
+
+
+def test_default_deadline_from_resilience_config(tiny):
+    """deadline_ttft_ms stamps every submit; an already-unmeetable
+    deadline (0 ms after a backdated arrival) sheds at the first
+    boundary."""
+    cfg, api, params = tiny
+    eng = InferenceEngine(
+        cfg, params, EngineConfig(num_slots=1, max_seq=16, page_size=4,
+                                  resilience=ResilienceConfig(
+                                      deadline_ttft_ms=0.0)))
+    eng.submit(_prompts(cfg.vocab, (5,))[0], 4,
+               arrival_t=eng.metrics.now() - 1.0)
+    res = eng.run()
+    assert res["results"] == [] and res["metrics"]["shed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# pressure-degraded spec admission (tentpole, part 2b)
+# ---------------------------------------------------------------------------
+
+def test_pressure_degrade_lossless(tiny, draft):
+    """Under pool pressure a new admission reserves lookahead 0 and the
+    segment degrades to plain decode instead of preempting — output
+    still bit-identical to the ample-pool spec run."""
+    cfg, api, params = tiny
+    prompts = _prompts(cfg.vocab, (8, 8, 8), seed=13)
+    budgets = (24, 4, 24)
+
+    def run(num_pages):
+        eng = InferenceEngine(
+            cfg, params,
+            EngineConfig(num_slots=2, max_seq=40, page_size=4,
+                         num_pages=num_pages, spec_k=4),
+            SamplingParams(), draft_params=draft)
+        for p, m in zip(prompts, budgets):
+            eng.submit(p, m)
+        return eng, eng.run()
+
+    _, base = run(None)                               # ample pool
+    eng, res = run(17)                                # r3 only fits at la=0
+    assert _by_rid(res) == _by_rid(base)
+    assert eng.tel.registry.counter("resil.degraded_segments").value > 0
+    assert res["metrics"]["preemptions"] == 0         # degrade sufficed
+    assert eng.kv.allocator.num_free == 17
+
+
+# ---------------------------------------------------------------------------
+# chaos harness: deterministic replay + losslessness (tentpole, part 3)
+# ---------------------------------------------------------------------------
+
+CHAOS = ChaosConfig(alloc_fail=0.3, latency=0.1, device_err=0.15,
+                    nan_logits=0.15, seed=7, latency_spike_s=1e-4,
+                    device_max_retries=6)
+
+
+def _chaos_run(cfg, params, chaos):
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=2, max_seq=24, page_size=4,
+                     resilience=ResilienceConfig(chaos=chaos)))
+    for p in _prompts(cfg.vocab, (4, 9, 5, 7, 6, 8), seed=31):
+        eng.submit(p, 6)
+    return eng, eng.run()
+
+
+def test_chaos_replay_bit_identical(tiny):
+    """Same seed, same faults, same recoveries, same tokens: two fresh
+    engines under an aggressive chaos mix replay bit-identically, and
+    both match the fault-free run (greedy losslessness under faults)."""
+    cfg, api, params = tiny
+    eng_clean, clean = _chaos_run(cfg, params, None)
+    assert eng_clean.chaos is None
+    eng1, res1 = _chaos_run(cfg, params, CHAOS)
+    eng2, res2 = _chaos_run(cfg, params, CHAOS)
+    snap1, snap2 = eng1.chaos.snapshot(), eng2.chaos.snapshot()
+    assert snap1 == snap2                              # same fault sequence
+    assert sum(snap1.values()) > 0                     # faults actually fired
+    assert res1["metrics"]["preemptions"] == res2["metrics"]["preemptions"]
+    assert _by_rid(res1) == _by_rid(res2)              # bit-identical replay
+    assert _by_rid(res1) == _by_rid(clean)             # lossless recovery
+    assert len(res1["results"]) == 6
+    assert eng1.kv.allocator.num_free == eng1.kv.num_pages
+    assert eng1.kv.allocator.num_outstanding == 0
+
+
+def test_chaos_nan_quarantine_and_recovery(tiny):
+    """nan_logits alone: poisoned segments are dropped, the slot sits
+    out admission, the request re-enqueues — and the output is still
+    exactly the fault-free greedy output."""
+    cfg, api, params = tiny
+    nan_only = ChaosConfig(nan_logits=0.5, seed=3)
+    _, clean = _chaos_run(cfg, params, None)
+    eng, res = _chaos_run(cfg, params, nan_only)
+    snap = eng.chaos.snapshot()
+    assert snap["nan_logits"] > 0
+    assert eng.tel.registry.counter("sched.quarantines").value \
+        == snap["nan_logits"]
+    assert res["metrics"]["preemptions"] >= snap["nan_logits"]
+    assert _by_rid(res) == _by_rid(clean)
+    assert eng.kv.allocator.num_free == eng.kv.num_pages
+
+
+def test_chaos_parse_round_trip():
+    c = ChaosConfig.parse(
+        "alloc_fail=0.05,latency=0.02,latency_spike_ms=1,retries=3,"
+        "backoff_ms=2,quarantine=5", seed=11)
+    assert c.alloc_fail == 0.05 and c.latency == 0.02
+    assert c.latency_spike_s == pytest.approx(1e-3)
+    assert c.device_max_retries == 3
+    assert c.device_backoff_s == pytest.approx(2e-3)
+    assert c.quarantine_boundaries == 5 and c.seed == 11
+    assert c.enabled
+    with pytest.raises(ValueError):
+        ChaosConfig.parse("bogus=1")
+    with pytest.raises(ValueError):
+        ChaosConfig(alloc_fail=1.5)
+
+
+# ---------------------------------------------------------------------------
+# overload cliff (satellite d)
+# ---------------------------------------------------------------------------
+
+def test_overload_cliff_partitions_and_conserves(tiny):
+    """Seeded open-loop burst far beyond sustainable rate against a pool
+    sized for ~one resident request: the run terminates, every request
+    lands in exactly one of met/miss/shed, goodput stays positive, and
+    the page pool drains back to full."""
+    cfg, api, params = tiny
+    ecfg = dict(num_slots=2, max_seq=32, page_size=4, num_pages=5)
+    # warm the jit caches with the exact shapes the burst will hit, so
+    # the deadline judges scheduling, not compilation
+    warm = InferenceEngine(cfg, params, EngineConfig(**ecfg))
+    for p, m in zip(_prompts(cfg.vocab, (2, 3, 5, 6), seed=1),
+                    (2, 2, 4, 4)):
+        warm.submit(p, m)
+    warm.run()
+    wl = generate(WorkloadSpec(process="poisson", rate=8000, requests=96,
+                               prompt_min=4, prompt_max=8, max_new_min=6,
+                               max_new_max=8, seed=9), vocab=cfg.vocab)
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(resilience=ResilienceConfig(deadline_ttft_ms=60),
+                     **ecfg))
+    eng.run(source=make_source(wl))
+    ledger = SLOLedger(SLO(ttft_ms=60), registry=eng.tel.registry)
+    ledger.judge(eng.metrics)
+    s = ledger.summary()
+    n_miss = sum(v.verdict == "miss" for v in ledger.verdicts)
+    assert s["requests"] == 96                       # nobody lost
+    assert s["met"] + s["shed"] + n_miss == 96       # exact partition
+    assert s["met"] >= 1 and s["shed"] >= 1          # cliff, not collapse
+    assert s["goodput_tokens"] > 0
+    assert eng.kv.allocator.num_free == 5            # no page leak
+    assert eng.kv.allocator.num_outstanding == 0
+
+
+def test_workload_priority_levels_draw_and_replay():
+    spec = WorkloadSpec(process="poisson", rate=100, requests=32,
+                        priority_levels=3, seed=5)
+    wl1, wl2 = generate(spec, vocab=128), generate(spec, vocab=128)
+    prios = {g.priority for g in wl1.requests}
+    assert prios <= {0, 1, 2} and len(prios) > 1
+    for a, b in zip(wl1.requests, wl2.requests):
+        assert a.priority == b.priority
+        assert np.array_equal(a.prompt, b.prompt)
+    # single-band specs draw no priorities; arrivals (drawn up front,
+    # before any per-request draw) are invariant to the band count
+    base = WorkloadSpec(process="poisson", rate=100, requests=32, seed=5)
+    wl0 = generate(base, vocab=128)
+    assert all(g.priority == 0 for g in wl0.requests)
+    for a, b in zip(wl0.requests, wl1.requests):
+        assert a.arrival_s == b.arrival_s
+    # and the first request's prompt precedes the first priority draw
+    assert np.array_equal(wl0.requests[0].prompt, wl1.requests[0].prompt)
+
+
+# ---------------------------------------------------------------------------
+# graceful shutdown (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_sigint_drains_and_flushes(tmp_path):
+    """SIGINT mid-serve: the engine sheds its queue, accounts in-flight
+    requests, and serve.py still flushes stats + digest (exit 0)."""
+    trace = tmp_path / "trace.json"
+    slo_json = tmp_path / "slo.json"
+    cmd = [sys.executable, "-u", "-m", "repro.launch.serve",
+           "--compress", "none", "--slots", "2", "--max-seq", "32",
+           "--page-size", "4", "--max-new", "8", "--stats-interval", "0.1",
+           "--workload", "process=poisson,rate=4,requests=400,"
+           "prompt=4:8,max_new=4:8",
+           "--slo", "ttft=200", "--slo-json", str(slo_json),
+           "--trace", str(trace)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True, env=env,
+                            cwd=os.path.dirname(__file__))
+    lines = []
+    deadline = time.time() + 180
+    interrupted = False
+    for line in proc.stdout:
+        lines.append(line)
+        if "[stats]" in line and not interrupted:
+            proc.send_signal(signal.SIGINT)   # serving underway: interrupt
+            interrupted = True
+        if time.time() > deadline:
+            proc.kill()
+            pytest.fail("serve.py did not produce stats output in time:\n"
+                        + "".join(lines))
+    rc = proc.wait(timeout=60)
+    out = "".join(lines)
+    assert interrupted, "no [stats] line before the run completed:\n" + out
+    assert rc == 0, out
+    assert "[interrupted]" in out
+    assert "[digest]" in out
+    assert "SLO [" in out                     # ledger still judged
+    assert trace.exists() and slo_json.exists()
