@@ -54,6 +54,11 @@ _RULES = (
     ("compression", +1, "quality"),
     ("traffic_ratio", +1, "quality"),
     ("bytes_per_token", -1, "quality"),
+    # prefix-cache effectiveness (DESIGN.md §13): offline runs are
+    # deterministic given the workload seed, so page traffic per request
+    # and cache hits are quality-class, not wall-clock
+    ("pages_per_request", -1, "quality"),
+    ("prefix_hits", +1, "quality"),
 )
 
 

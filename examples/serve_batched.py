@@ -45,6 +45,20 @@ recovery paths; two runs with the same ``--seed`` replay bit-identically
         --workload 'process=poisson,rate=200,requests=32,prompt=4:12' \
         --deadline 100 --slo ttft=100 \
         --chaos alloc_fail=0.05,latency=0.02,nan_logits=0.05 --seed 11
+
+Shared-prefix KV reuse (DESIGN.md §13): ``--prefix-cache`` turns on
+the radix prefix cache over refcounted copy-on-write pages — requests
+whose prompts share full token blocks (system prompts, few-shot
+templates, the ``prefix_share``/``prefix_pool`` workload knobs above)
+map the shared pages into their block tables and prefill only the
+unshared tail, so TTFT and page traffic drop with the share ratio
+while greedy outputs stay bit-identical to a cache-off run (same
+``[digest]``). The run prints a ``[prefix]`` hit/miss/COW/eviction
+summary:
+
+    PYTHONPATH=src python -m repro.launch.serve --prefix-cache \
+        --page-size 4 --workload 'process=poisson,rate=50,requests=16,\
+prompt=24:24,prefix_share=0.8,prefix_pool=4,prefix_len=20'
 """
 import argparse
 

@@ -13,8 +13,9 @@ from repro.engine.kv_cache import PageAllocator, PagedKVCache
 from repro.engine.loadgen import (SLO, SLOLedger, Workload, WorkloadSpec,
                                   generate, make_source)
 from repro.engine.metrics import EngineMetrics
-from repro.engine.resilience import (ChaosConfig, RejectedRequest,
-                                     ResilienceConfig)
+from repro.engine.prefix_cache import PrefixCache
+from repro.engine.resilience import (ChaosConfig, OversizedRequest,
+                                     RejectedRequest, ResilienceConfig)
 from repro.engine.sampling import SamplingParams, sample, spec_verify
 from repro.engine.scheduler import Request, Scheduler
 from repro.engine.telemetry import (MetricsRegistry, SpanTracer,
@@ -26,4 +27,4 @@ __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "MetricsRegistry", "SpanTracer", "StreamingHistogram",
            "WorkloadSpec", "Workload", "generate", "make_source", "SLO",
            "SLOLedger", "ResilienceConfig", "ChaosConfig",
-           "RejectedRequest"]
+           "RejectedRequest", "OversizedRequest", "PrefixCache"]

@@ -53,6 +53,11 @@ class EngineConfig:
     prompt_bucket_min: int = 8        # prefill pad bucket floor (pow2 above)
     use_pallas: bool = False
     seed: int = 0
+    # shared-prefix KV reuse (engine/prefix_cache.py, DESIGN.md §13):
+    # admission maps cached full-page prompt blocks to existing pages
+    # (refcounted, copy-on-write) and prefills only the unshared tail.
+    # Greedy outputs are bit-identical on/off (pinned by test).
+    prefix_cache: bool = False
     # overload resilience (engine/resilience/, DESIGN.md §12): preemption
     # + shedding + pressure degrade + optional chaos injection. None uses
     # the all-defaults ResilienceConfig (inert without priority
@@ -114,10 +119,32 @@ def _step_fns(cfg, sampling: SamplingParams, use_pallas: bool):
                 nxt = sample(logits[:, -1, :], sub, sampling)
         return nxt, positions + active, cache, rng
 
+    def tail_fn(params, cache, tokens, positions, feed_len, block_tables,
+                rng, max_live):
+        # prefix-cache tail prefill (DESIGN.md §13): slots whose prompt
+        # prefix is served from cached pages feed only the unshared tail
+        # — a ragged multi-token decode block (token t writes/attends at
+        # positions + t, rows padded to one T and sentinel-masked past
+        # feed_len). First-token logits come from each row's LAST real
+        # token, so the clamp in assign guarantees feed_len >= 1.
+        with jax.named_scope("engine_prefill_tail"):
+            logits, cache = api.decode_step(params, cache, tokens,
+                                            positions, cfg, None, use_pallas,
+                                            block_tables=block_tables,
+                                            max_live_pages=max_live,
+                                            feed_len=feed_len)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(feed_len - 1, 0)[:, None, None],
+                axis=1)[:, 0, :]
+            rng, sub = jax.random.split(rng)
+            first = sample(last, sub, sampling)
+        return first, cache, rng
+
     # max_live is static: it clamps the block tables to the batch's max
     # occupied page count (pow2-bucketed by the engine, so at most
     # log2(max_pages_per_slot) retraces per engine lifetime)
-    return jax.jit(prefill_fn), jax.jit(decode_fn, static_argnums=(7,))
+    return (jax.jit(prefill_fn), jax.jit(decode_fn, static_argnums=(7,)),
+            jax.jit(tail_fn, static_argnums=(7,)))
 
 
 class InferenceEngine:
@@ -189,7 +216,8 @@ class InferenceEngine:
         self.kv = PagedKVCache(cfg, api, engine_cfg.num_slots,
                                engine_cfg.max_seq, engine_cfg.page_size,
                                engine_cfg.num_pages,
-                               lookahead=lookahead, registry=reg)
+                               lookahead=lookahead, registry=reg,
+                               prefix_cache=engine_cfg.prefix_cache)
         self.kv.chaos = self.chaos
         self.scheduler = Scheduler(engine_cfg.num_slots, self.kv,
                                    engine_cfg.max_seq, registry=reg)
@@ -206,7 +234,7 @@ class InferenceEngine:
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
         # spec mode log: (tokens [B, W], counts [B]) per prefill/round
         self._spec_log: List = []
-        self._prefill_fn, self._decode_fn = _step_fns(
+        self._prefill_fn, self._decode_fn, self._tail_fn = _step_fns(
             cfg, sampling, engine_cfg.use_pallas)
         if self.spec and not self._spec_tree:
             from repro.engine.spec import spec_step_fns
@@ -370,7 +398,7 @@ class InferenceEngine:
             return None
         sch = self.scheduler
         head_blocked = bool(sch.waiting) and not self.kv.can_admit(
-            sch.waiting[0].total_tokens)
+            sch.waiting[0].total_tokens, prompt=sch.waiting[0].prompt)
         lvl = pressure_level(self.kv, head_blocked,
                              self.rcfg.pressure_occupancy)
         if lvl == PRESSURE_CRITICAL:
@@ -391,7 +419,8 @@ class InferenceEngine:
                         for i, s in enumerate(sch.slots))
         la_eff = self.kv.lookahead if la is None else la
         head = sch.waiting[0]
-        if not slot_free or self.kv.can_admit(head.total_tokens, la_eff):
+        if not slot_free or self.kv.can_admit(head.total_tokens, la_eff,
+                                              prompt=head.prompt):
             return 0
         running = [r for r in sch.active() if r.state == DECODE]
         victims = choose_victims(head, running, self.kv, la_eff,
@@ -698,41 +727,117 @@ class InferenceEngine:
     def _do_prefill(self, admitted: List[Request]) -> None:
         b = self.ecfg.num_slots
         tracer = self.tel.tracer
-        # cap the pow2 bucket at max_seq: prompt_len <= max_seq is enforced
-        # at submit, and wider buckets are pure waste (FLOPs + a compile)
-        s = min(_bucket(max(r.prompt_len for r in admitted),
-                        self.ecfg.prompt_bucket_min), self.ecfg.max_seq)
-        tokens = np.zeros((b, s), np.int32)
-        lengths = np.zeros((b,), np.int32)
-        # decoding slots must be invisible to the prefill scatter: their
-        # rows get length 0 + all-sentinel block tables
-        bt = np.full_like(self.kv.block_tables, self.kv.sentinel)
-        mask = np.zeros((b,), bool)
+        # prefix-cache split (DESIGN.md §13): slots whose prompt prefix
+        # was mapped to cached pages at admission prefill only the
+        # unshared tail (a ragged multi-token decode block against the
+        # already-populated paged prefix); the rest take the batched
+        # flash prefill as before. Two dispatch groups, one boundary.
+        shared = [r for r in admitted
+                  if self.kv.slot_shared_tokens(r.slot) > 0]
+        full = [r for r in admitted
+                if self.kv.slot_shared_tokens(r.slot) == 0]
+        merged = self._tokens
+        lengths_all = np.zeros((b,), np.int32)
+        mask_all = np.zeros((b,), bool)
+        idx_of: Dict[int, int] = {}       # rid -> token-log index
         for r in admitted:
             self.metrics.record_admit(r.rid)
-            tokens[r.slot, :r.prompt_len] = r.prompt
-            lengths[r.slot] = r.prompt_len
-            bt[r.slot] = self.kv.block_tables[r.slot]
-            mask[r.slot] = True
-        with tracer.span("prefill") as sp, tracer.annotate("prefill"):
-            first, self.kv.data, self._rng = self._dispatch(
-                self._prefill_fn,
-                self.params, self.kv.data, jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(bt), self._rng)
-            jax.block_until_ready(first)
-            sp.set(admitted=len(admitted), bucket=s,
-                   tokens=len(admitted),
-                   prompt_tokens=int(lengths.sum()))
-            if tracer.enabled:
-                for r in admitted:
-                    tracer.flow_point(r.rid, "prefill", t=sp.t0)
+            lengths_all[r.slot] = r.prompt_len
+            mask_all[r.slot] = True
+        if full:
+            # cap the pow2 bucket at max_seq: prompt_len <= max_seq is
+            # enforced at submit, wider buckets are pure waste
+            s = min(_bucket(max(r.prompt_len for r in full),
+                            self.ecfg.prompt_bucket_min), self.ecfg.max_seq)
+            tokens = np.zeros((b, s), np.int32)
+            lengths = np.zeros((b,), np.int32)
+            # non-group slots must be invisible to the prefill scatter:
+            # their rows get length 0 + all-sentinel block tables
+            bt = np.full_like(self.kv.block_tables, self.kv.sentinel)
+            mask = np.zeros((b,), bool)
+            for r in full:
+                tokens[r.slot, :r.prompt_len] = r.prompt
+                lengths[r.slot] = r.prompt_len
+                bt[r.slot] = self.kv.block_tables[r.slot]
+                mask[r.slot] = True
+            with tracer.span("prefill") as sp, tracer.annotate("prefill"):
+                first, self.kv.data, self._rng = self._dispatch(
+                    self._prefill_fn,
+                    self.params, self.kv.data, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(bt), self._rng)
+                jax.block_until_ready(first)
+                sp.set(admitted=len(full), bucket=s,
+                       tokens=len(full),
+                       prompt_tokens=int(lengths.sum()))
+                if tracer.enabled:
+                    for r in full:
+                        tracer.flow_point(r.rid, "prefill", t=sp.t0)
+            if self.spec:
+                idx = self._log_spec(first[:, None],
+                                     jnp.asarray(mask.astype(np.int32)))
+            else:
+                idx = len(self._token_log)
+                self._token_log.append(first)
+            for r in full:
+                idx_of[r.rid] = idx
+            merged = jnp.where(jnp.asarray(mask), first, merged)
+        if shared:
+            # unshared tails, padded to one pow2 T; feed_len masks the
+            # padding's K/V writes (sentinel convention), so rows of
+            # different tail lengths ride one dispatch safely
+            t_pad = min(_bucket(max(r.prompt_len
+                                    - self.kv.slot_shared_tokens(r.slot)
+                                    for r in shared),
+                                self.ecfg.prompt_bucket_min),
+                        self.ecfg.max_seq)
+            toks = np.zeros((b, t_pad), np.int32)
+            starts = np.zeros((b,), np.int32)
+            feed = np.zeros((b,), np.int32)
+            bt = np.full_like(self.kv.block_tables, self.kv.sentinel)
+            mask = np.zeros((b,), bool)
+            hit_tokens = 0
+            for r in shared:
+                sh = self.kv.slot_shared_tokens(r.slot)
+                n = r.prompt_len - sh
+                toks[r.slot, :n] = r.prompt[sh:]
+                starts[r.slot] = sh
+                feed[r.slot] = n
+                bt[r.slot] = self.kv.block_tables[r.slot]
+                mask[r.slot] = True
+                hit_tokens += sh
+            occ = int((bt != self.kv.sentinel).sum(1).max())
+            max_live = min(_bucket(max(occ, 1), 1),
+                           self.kv.max_pages_per_slot)
+            with tracer.span("prefill_tail") as sp, \
+                    tracer.annotate("prefill_tail"):
+                first_t, self.kv.data, self._rng = self._dispatch(
+                    self._tail_fn,
+                    self.params, self.kv.data, jnp.asarray(toks),
+                    jnp.asarray(starts), jnp.asarray(feed),
+                    jnp.asarray(bt), self._rng, max_live)
+                jax.block_until_ready(first_t)
+                sp.set(admitted=len(shared), bucket=t_pad,
+                       tail_tokens=int(feed.sum()),
+                       shared_tokens=hit_tokens)
+                if tracer.enabled:
+                    for r in shared:
+                        tracer.flow_point(r.rid, "prefill_tail", t=sp.t0)
+            if self.spec:
+                idx = self._log_spec(first_t[:, None],
+                                     jnp.asarray(mask.astype(np.int32)))
+            else:
+                idx = len(self._token_log)
+                self._token_log.append(first_t)
+            for r in shared:
+                idx_of[r.rid] = idx
+            merged = jnp.where(jnp.asarray(mask), first_t, merged)
+        # the prompts' full-page K/V blocks are now all written (cached
+        # prefix + freshly prefilled remainder): cache them BEFORE any
+        # budget-exhausted request below releases its pages
+        if self.kv.prefix is not None:
+            for r in admitted:
+                self.kv.prefix_insert(r.slot, r.prompt)
         t = self.metrics.now()
-        if self.spec:
-            idx = self._log_spec(first[:, None],
-                                 jnp.asarray(mask.astype(np.int32)))
-        else:
-            idx = len(self._token_log)
-            self._token_log.append(first)
         done_now = []
         for r in admitted:
             r.state = DECODE
@@ -740,7 +845,7 @@ class InferenceEngine:
             # #folded+1 for a preempted one resuming from its folded
             # prompt (produced == folded at re-admission)
             r.produced += 1
-            r.log_entries = [idx]
+            r.log_entries = [idx_of[r.rid]]
             self.metrics.record_first_token(r.rid, t)
             if r.produced >= r.max_new_tokens:   # budget exhausted already
                 self.metrics.record_finish(r.rid, t, r.produced)
@@ -750,9 +855,10 @@ class InferenceEngine:
             if self._source is not None:   # closed-loop completion feedback
                 self._source.on_finish(t - self.metrics.start_t)
         # merge the admitted slots into the device-side decode state
-        m = jnp.asarray(mask)
-        self._tokens = jnp.where(m, first, self._tokens)
-        self._positions = jnp.where(m, jnp.asarray(lengths), self._positions)
+        self._tokens = merged
+        self._positions = jnp.where(jnp.asarray(mask_all),
+                                    jnp.asarray(lengths_all),
+                                    self._positions)
         self._sync_slot_state()
 
     def _log_spec(self, toks: jnp.ndarray, counts: jnp.ndarray) -> int:

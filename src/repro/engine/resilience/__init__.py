@@ -26,12 +26,13 @@ from repro.engine.resilience.chaos import (ChaosConfig, ChaosDeviceError,
                                            make_injector)
 from repro.engine.resilience.policy import (PRESSURE_CRITICAL,
                                             PRESSURE_ELEVATED, PRESSURE_OK,
+                                            OversizedRequest,
                                             RejectedRequest,
                                             ResilienceConfig,
                                             choose_victims, pressure_level)
 
 __all__ = ["ChaosConfig", "ChaosInjector", "ChaosDeviceError",
            "TransientAllocFailure", "FAULTS", "make_injector",
-           "ResilienceConfig", "RejectedRequest", "choose_victims",
-           "pressure_level", "PRESSURE_OK", "PRESSURE_ELEVATED",
-           "PRESSURE_CRITICAL"]
+           "ResilienceConfig", "RejectedRequest", "OversizedRequest",
+           "choose_victims", "pressure_level", "PRESSURE_OK",
+           "PRESSURE_ELEVATED", "PRESSURE_CRITICAL"]

@@ -41,6 +41,15 @@ class RejectedRequest(ValueError):
     Subclasses ``ValueError`` for backward compatibility."""
 
 
+class OversizedRequest(RejectedRequest):
+    """The reservation (tokens + speculative lookahead) needs more pages
+    than one slot's block table holds — no pool occupancy can admit it.
+    Raised by ``PagedKVCache.assign`` *before* any allocator mutation
+    (DESIGN.md §13 bugfix: the pre-fix path allocated first and died in
+    the block-table write, leaking the pages); ``RejectedRequest``-
+    compatible so submit-side callers surface it as a rejection."""
+
+
 # pressure levels, in escalation order
 PRESSURE_OK, PRESSURE_ELEVATED, PRESSURE_CRITICAL = 0, 1, 2
 
@@ -73,7 +82,11 @@ def pressure_level(kv, head_blocked: bool,
     never use. OK otherwise."""
     if head_blocked:
         return PRESSURE_CRITICAL
-    free = kv.allocator.num_free
+    # unreferenced cached-prefix pages are reclaimable on demand
+    # (DESIGN.md §13): a pool that is "full of cache" is not under
+    # pressure, so count evictables as free before degrading admissions
+    free = kv.allocator.num_free + getattr(
+        kv, "evictable_pages", lambda: 0)()
     occ = 1.0 - free / max(kv.num_pages, 1)
     if occ >= occupancy_threshold:
         return PRESSURE_ELEVATED
@@ -94,7 +107,13 @@ def choose_victims(head, running: List, kv, lookahead: int,
     when even preempting every eligible victim wouldn't (partial
     preemption is pure churn: pages freed, head still blocked)."""
     needed = kv.pages_needed(head.total_tokens, lookahead=lookahead)
-    free = kv.allocator.num_free
+    # prefix-cache eviction outranks preemption on the ladder: if
+    # dropping unreferenced cached prefixes covers the reservation,
+    # assign will evict them itself — no victim needed. slot_page_count
+    # is refcount-aware, so shared pages a victim would NOT return to
+    # the pool are never credited toward unblocking the head.
+    free = kv.allocator.num_free + getattr(
+        kv, "evictable_pages", lambda: 0)()
     if free >= needed:
         return []
     eligible = [r for r in running

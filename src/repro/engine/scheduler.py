@@ -267,11 +267,17 @@ class Scheduler:
                       if s.free and i not in self._quarantine]
         while self.waiting and free_slots:
             head = self.waiting[0]             # serve from the head
-            if not self.kv.can_admit(head.total_tokens, lookahead):
+            # the prompt rides along so the prefix cache can map shared
+            # full-page blocks to existing pages (DESIGN.md §13); for a
+            # preempt-fold re-admit the folded prompt re-matches its
+            # original prefix, so recompute shrinks to the tail
+            if not self.kv.can_admit(head.total_tokens, lookahead,
+                                     prompt=head.prompt):
                 break                          # out-of-pages backpressure
             slot = free_slots[0]
             try:
-                self.kv.assign(slot, head.total_tokens, lookahead)
+                self.kv.assign(slot, head.total_tokens, lookahead,
+                               prompt=head.prompt)
             except TransientAllocFailure:
                 break                          # chaos: retry next boundary
             self.waiting.popleft()

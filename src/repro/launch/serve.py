@@ -89,6 +89,12 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
                     help="KV page pool size (default: slots*max_seq worth)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse (DESIGN.md §13): radix "
+                         "cache of full-page prompt blocks; admissions "
+                         "map cached prefixes to existing pages "
+                         "(refcounted, copy-on-write) and prefill only "
+                         "the unshared tail — lossless for greedy")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -222,6 +228,7 @@ def main(argv=None):
         cfg, params,
         EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
                      page_size=args.page_size, num_pages=args.num_pages,
+                     prefix_cache=args.prefix_cache,
                      use_pallas=args.use_pallas, seed=args.seed,
                      spec_k=args.spec, spec_draft_layers=dlayers,
                      spec_fanout=spec_fanout,
@@ -272,6 +279,15 @@ def main(argv=None):
         h.update(np.int64(r["rid"]).tobytes())
         h.update(np.asarray(r["tokens"], np.int32).tobytes())
     print(f"[digest] {h.hexdigest()}")
+    if args.prefix_cache:
+        reg = telemetry.registry
+        print("[prefix] hits="
+              f"{int(reg.counter('prefix.hits').value)} "
+              f"misses={int(reg.counter('prefix.misses').value)} "
+              f"hit_tokens={int(reg.counter('prefix.hit_tokens').value)} "
+              f"cow={int(reg.counter('prefix.cow_copies').value)} "
+              f"evicted={int(reg.counter('prefix.evicted_pages').value)} "
+              f"cached={int(reg.gauge('prefix.cached_pages').value)}")
     if engine.chaos is not None:
         snap = engine.chaos.snapshot()
         retries = int(telemetry.registry.counter(

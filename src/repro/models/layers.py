@@ -579,7 +579,8 @@ def paged_block_geometry(positions: jnp.ndarray, t: int,
 
 def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                            block_tables: jnp.ndarray, positions: jnp.ndarray,
-                           cfg, use_pallas=False, tree: Optional[Dict] = None
+                           cfg, use_pallas=False, tree: Optional[Dict] = None,
+                           feed_len: Optional[jnp.ndarray] = None
                            ) -> Tuple[jnp.ndarray, Dict]:
     """One decode step of T tokens against a *paged* KV cache (one layer's
     view). T=1 is plain continuous-batching decode; T=K+1 is the
@@ -628,6 +629,16 @@ def attention_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     page = jnp.take_along_axis(block_tables, pos_bt // page_size,
                                axis=1)                       # [B, T]
     off = pos_bt % page_size
+    if feed_len is not None:
+        # ragged multi-token feed (prefix-cache tail prefill, DESIGN.md
+        # §13): rows feed feed_len[i] <= T real tokens. Positions at or
+        # past a row's feed_len remap to the out-of-range sentinel so
+        # their K/V writes drop — the same convention batched prefill
+        # uses for padding — instead of take_along_axis clipping them
+        # onto the row's last live page and corrupting it.
+        page = jnp.where(
+            jnp.arange(t, dtype=jnp.int32)[None, :] < feed_len[:, None],
+            page, kp.shape[0])
 
     def write(buf, new):                 # [P, ps, ...] <- [B, T, ...]
         return buf.at[page, off].set(new.astype(buf.dtype))

@@ -155,7 +155,8 @@ def mla_decode(p: Dict, x: jnp.ndarray, cache: Dict, pos, cfg,
 def mla_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
                      block_tables: jnp.ndarray, positions: jnp.ndarray,
                      cfg, use_pallas: bool = False,
-                     tree: Optional[Dict] = None
+                     tree: Optional[Dict] = None,
+                     feed_len: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, Dict]:
     """T-token absorbed MLA decode against the PAGED latent pool (one
     layer's view) — the mla_moe twin of
@@ -193,6 +194,13 @@ def mla_decode_paged(p: Dict, x: jnp.ndarray, cache: Dict,
     page = jnp.take_along_axis(block_tables, pos_bt // page_size,
                                axis=1)                       # [B, T]
     off = pos_bt % page_size
+    if feed_len is not None:
+        # ragged feed (prefix-cache tail prefill): positions at or past a
+        # row's feed_len write to the out-of-range sentinel, same masking
+        # as layers.py:attention_decode_paged
+        page = jnp.where(
+            jnp.arange(t, dtype=jnp.int32)[None, :] < feed_len[:, None],
+            page, lat.shape[0])
     new = {"lat_pages": lat.at[page, off].set(lat_new.astype(lat.dtype))}
 
     q_scaled = _absorbed_q(p, q_nope, q_rope, cfg)           # [B,T,H,R+r]

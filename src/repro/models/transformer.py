@@ -272,7 +272,8 @@ def prefill(params: Dict, cache: Dict, tokens: jnp.ndarray,
 def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg, dist=None, use_pallas: bool = False,
                 block_tables=None, max_live_pages: Optional[int] = None,
-                tree: Optional[Dict] = None
+                tree: Optional[Dict] = None,
+                feed_len: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """tokens: [B, T]; pos: scalar shared step index OR [B] per-slot
     positions. ``cache`` is either the contiguous cache from
@@ -290,6 +291,13 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
     the fed window (`models/layers.py:attention_decode_paged`,
     DESIGN.md §8).
 
+    ``feed_len`` [B] (paged cache only) makes the T-token feed ragged:
+    row i's tokens at t >= feed_len[i] are padding — their K/V writes
+    are dropped (sentinel-masked) and their logits are garbage to be
+    discarded by the caller. This is the prefix-cache tail prefill
+    (DESIGN.md §13): slots prefill unshared tails of different lengths
+    padded to one T.
+
     ``max_live_pages`` (static) clamps the block tables to the batch's
     max *occupied* page count: every slot's allocation (prompt + budget
     + lookahead) fits in the leading entries, so the trailing all-
@@ -304,6 +312,8 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
         raise ValueError("paged cache decode requires block_tables")
     if tree is not None and not paged:
         raise ValueError("token-tree decode requires the paged cache")
+    if feed_len is not None and not paged:
+        raise ValueError("ragged feed_len requires the paged cache")
     if paged and max_live_pages is not None:
         block_tables = block_tables[
             :, :max(1, min(max_live_pages, block_tables.shape[1]))]
@@ -315,11 +325,13 @@ def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
         if paged and cfg.family == "mla_moe":
             a, new_c = MLA.mla_decode_paged(lp["attn"], hn, lc,
                                             block_tables, pos, cfg,
-                                            use_pallas, tree=tree)
+                                            use_pallas, tree=tree,
+                                            feed_len=feed_len)
         elif paged:
             a, new_c = L.attention_decode_paged(lp["attn"], hn, lc,
                                                 block_tables, pos, cfg,
-                                                use_pallas, tree=tree)
+                                                use_pallas, tree=tree,
+                                                feed_len=feed_len)
         elif cfg.family == "mla_moe":
             a, new_c = MLA.mla_decode(lp["attn"], hn, lc, pos, cfg,
                                       use_pallas)

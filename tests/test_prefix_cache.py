@@ -1,0 +1,466 @@
+"""Shared-prefix KV reuse (DESIGN.md §13): refcounted pages, the radix
+prefix cache, copy-on-write, tail-only prefill losslessness, eviction
+under pressure — plus the two PR-9 admission-path bugfix regressions
+(oversized assign must reject BEFORE mutating allocator state; release
+telemetry must count actual page returns after the free succeeds)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import (EngineConfig, InferenceEngine, OversizedRequest,
+                          PageAllocator, PagedKVCache, PrefixCache,
+                          RejectedRequest, SamplingParams, Scheduler)
+from repro.engine.loadgen import ArrivalSource, GeneratedRequest
+from repro.engine.telemetry import MetricsRegistry
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama2_7b", reduced=True)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, api, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
+
+
+def _shared_prompts(vocab, prefix_len, tail_lens, seed=0):
+    """Prompts sharing one random prefix, with random tails of the given
+    lengths (0 = the bare prefix: the page-aligned COW case)."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+    return [np.concatenate([pre, rng.integers(0, vocab, size=n)
+                            .astype(np.int32)]) for n in tail_lens]
+
+
+# ---------------------------------------------------------------------------
+# refcounted allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcounts():
+    a = PageAllocator(8)
+    p = a.alloc(2)
+    assert all(a.refcount(x) == 1 for x in p)
+    a.incref([p[0]])
+    assert a.refcount(p[0]) == 2 and a.num_shared == 1
+    # decref-all: only the refcount-0 page returns to the free list
+    assert a.free(p) == [p[1]]
+    assert a.refcount(p[0]) == 1 and a.num_shared == 0
+    assert p[0] not in a._free and a.num_outstanding == 1
+    assert a.free([p[0]]) == [p[0]]
+    assert a.num_free == 8 and a.num_outstanding == 0
+    # conservation holds refcount-weighted at every point above
+    assert a.num_free + a.num_outstanding == 8
+
+
+def test_allocator_incref_validation():
+    a = PageAllocator(4)
+    p = a.alloc(1)
+    never_alloced = next(x for x in range(4) if x != p[0])
+    with pytest.raises(ValueError):
+        a.incref([never_alloced])  # free page: would resurrect under alloc
+    with pytest.raises(ValueError):
+        a.incref([99])         # out of range
+    a.free(p)
+    with pytest.raises(ValueError):
+        a.incref(p)            # released page
+
+
+def test_allocator_shared_page_double_decref_caught():
+    a = PageAllocator(4)
+    p = a.alloc(1)
+    a.incref(p)
+    a.free(p)
+    a.free(p)                  # second reference dropped -> actually freed
+    with pytest.raises(ValueError):
+        a.free(p)              # third decref is a real double-free
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+
+def test_oversized_assign_rejected_before_any_mutation(tiny):
+    """PR-9 bugfix: assign(slot, 64) at max_seq=32/page_size=16 used to
+    alloc 4 pages, then die in the 2-wide block-table broadcast — pages
+    leaked, table all-sentinel, gauges stale. It must now raise a typed
+    RejectedRequest-compatible error with state EXACTLY as before."""
+    cfg, api, _ = tiny
+    reg = MetricsRegistry()
+    kv = PagedKVCache(cfg, api, num_slots=2, max_seq=32, page_size=16,
+                      registry=reg)
+    before_free = kv.allocator.num_free
+    before_bt = kv.block_tables.copy()
+    before_allocs = reg.counter("kv.page_allocs").value
+    before_gauge = reg.gauge("kv.pages_free").value
+    with pytest.raises(OversizedRequest):
+        kv.assign(0, 64)
+    assert issubclass(OversizedRequest, RejectedRequest)
+    assert issubclass(OversizedRequest, ValueError)
+    assert kv.allocator.num_free == before_free
+    assert kv.allocator.num_outstanding == 0
+    np.testing.assert_array_equal(kv.block_tables, before_bt)
+    assert reg.counter("kv.page_allocs").value == before_allocs
+    assert reg.gauge("kv.pages_free").value == before_gauge
+    # the slot is still perfectly usable
+    kv.assign(0, 32)
+    assert kv.allocator.num_outstanding == 2
+
+
+def test_can_admit_rejects_oversized(tiny):
+    cfg, api, _ = tiny
+    kv = PagedKVCache(cfg, api, num_slots=2, max_seq=32, page_size=16)
+    assert not kv.can_admit(64)     # would raise in assign -> not admissible
+
+
+def test_release_counts_actual_frees_after_mutation(tiny):
+    """PR-9 bugfix: release() used to bump kv.page_frees BEFORE
+    allocator.free could raise. The counter must move only when the free
+    succeeds, and must count actual page returns (shared pages survive
+    their cache reference and are NOT freed by a slot release)."""
+    cfg, api, _ = tiny
+    reg = MetricsRegistry()
+    kv = PagedKVCache(cfg, api, num_slots=2, max_seq=32, page_size=16,
+                      registry=reg)
+    kv.assign(0, 32)
+    pages = list(kv._slot_pages[0])
+    kv.allocator.free([pages[0]])   # sabotage: page 0 already returned
+    before = reg.counter("kv.page_frees").value
+    with pytest.raises(ValueError):
+        kv.release(0)               # double-free caught by the allocator
+    assert reg.counter("kv.page_frees").value == before
+
+    kv2 = PagedKVCache(cfg, api, num_slots=2, max_seq=32, page_size=16,
+                       registry=MetricsRegistry(), prefix_cache=True)
+    prompt = np.arange(32, dtype=np.int32)
+    kv2.assign(0, 32, prompt=prompt)
+    kv2.prefix_insert(0, prompt)    # both full blocks now cache-held
+    held = kv2.prefix.cached_pages
+    assert held == 2
+    frees = kv2._c_frees
+    before = frees.value
+    kv2.release(0)
+    # only the pages the cache does NOT hold actually returned
+    assert frees.value - before == 2 - held
+    assert kv2.allocator.num_outstanding == held
+
+
+# ---------------------------------------------------------------------------
+# radix cache units
+# ---------------------------------------------------------------------------
+
+def test_radix_match_insert():
+    a = PageAllocator(16)
+    pc = PrefixCache(4, a)
+    prompt = np.arange(11, dtype=np.int32)        # blocks [0:4],[4:8]; tail 3
+    pages = a.alloc(3)
+    assert pc.insert(prompt, pages) == 2          # only FULL blocks cached
+    assert [n.page for n in pc.match(prompt)] == pages[:2]
+    assert a.refcount(pages[0]) == 2              # slot ref + cache ref
+    # a diverging prompt matches only the common full-block prefix
+    other = prompt.copy()
+    other[6] = 999
+    assert len(pc.match(other)) == 1
+    # re-insert is idempotent: existing nodes keep their pages, no refs
+    assert pc.insert(prompt, a.alloc(3)) == 0
+
+
+def test_radix_lru_leaf_first_eviction():
+    a = PageAllocator(16)
+    pc = PrefixCache(4, a)
+    p1 = _shared_prompts(100, 8, [0], seed=1)[0]  # 2 blocks: chain A
+    p2 = np.arange(50, 58, dtype=np.int32)        # 2 blocks: chain B
+    g1, g2 = a.alloc(2), a.alloc(2)
+    pc.insert(p1, g1)
+    pc.insert(p2, g2)
+    a.free(g1)
+    a.free(g2)                                    # cache-held only now
+    pc.match(p1)                                  # touch chain A: B is LRU
+    assert pc.evictable_count() == 4
+    pc.evict_for(1)
+    # the LRU LEAF went first: chain B's depth-1 node, never a parent
+    # with a live child, and never recently-used chain A
+    assert len(pc.match(p1)) == 2
+    assert len(pc.match(p2, touch=False)) == 1
+    pc.evict_for(99)
+    assert pc.cached_pages == 0
+    assert a.num_free == 16
+
+
+def test_eviction_excludes_pinned_and_referenced():
+    a = PageAllocator(16)
+    pc = PrefixCache(4, a)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = a.alloc(2)
+    pc.insert(prompt, pages)
+    # slot still references its pages: nothing is evictable
+    assert pc.evictable_count() == 0
+    assert pc.evict_for(2) == 0
+    a.free(pages)
+    nodes = pc.match(prompt)
+    assert pc.evictable_count(exclude=nodes) == 0   # pinned by admission
+    assert pc.evict_for(2, exclude=[nodes[1]]) == 0  # leaf pinned blocks all
+    assert pc.evict_for(2) == 2
+
+
+# ---------------------------------------------------------------------------
+# assign-time sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_assign_maps_shared_prefix_and_cows_aligned_hit(tiny):
+    cfg, api, _ = tiny
+    kv = PagedKVCache(cfg, api, num_slots=3, max_seq=64, page_size=16,
+                      prefix_cache=True)
+    long, aligned = _shared_prompts(cfg.vocab, 32, [8, 0], seed=2)
+    kv.assign(0, len(long) + 8, prompt=long)
+    assert kv.slot_shared_tokens(0) == 0          # cold miss
+    kv.prefix_insert(0, long)
+    # partial hit: both full blocks shared, tail prefills from token 32
+    kv.assign(1, len(long) + 8, prompt=long)
+    assert kv.slot_shared_tokens(1) == 32
+    np.testing.assert_array_equal(kv.block_tables[0, :2],
+                                  kv.block_tables[1, :2])
+    assert kv.block_tables[0, 2] != kv.block_tables[1, 2]
+    # page-aligned full-prompt hit: the clamp forces recomputing the last
+    # token, which lives in cached block 1 -> that block is COW-copied
+    cow_before = kv._c_cow.value
+    kv.assign(2, len(aligned) + 8, prompt=aligned)
+    assert kv.slot_shared_tokens(2) == 31
+    assert kv._c_cow.value == cow_before + 1
+    assert kv.block_tables[2, 0] == kv.block_tables[0, 0]   # block 0 shared
+    assert kv.block_tables[2, 1] != kv.block_tables[0, 1]   # block 1 private
+    # conservation, refcount-weighted
+    alc = kv.allocator
+    assert alc.num_free + alc.num_outstanding == kv.num_pages
+    for s in range(3):
+        kv.release(s)
+    assert alc.num_outstanding == kv.prefix.cached_pages
+
+
+def test_assign_alloc_failure_rolls_back_increfs(tiny):
+    cfg, api, _ = tiny
+    kv = PagedKVCache(cfg, api, num_slots=2, max_seq=64, page_size=16,
+                      num_pages=4, prefix_cache=True)
+    prompt = np.arange(20, dtype=np.int32)
+    kv.assign(0, 28, prompt=prompt)               # 2 pages, 2 left free
+    kv.prefix_insert(0, prompt)                   # block 0 cached (rc 2)
+    rc = kv.allocator.refcount(int(kv.block_tables[0, 0]))
+    with pytest.raises(RuntimeError):
+        # matches the cached block (incref) but needs 3 own pages with 2
+        # free and nothing evictable (slot 0 still references all of its
+        # pages) -> alloc raises AFTER the incref, which must roll back
+        kv.assign(1, 64, prompt=prompt)
+    assert kv.allocator.refcount(int(kv.block_tables[0, 0])) == rc
+    assert kv.allocator.num_free + kv.allocator.num_outstanding \
+        == kv.num_pages
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: losslessness + telemetry + eviction under pressure
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, max_new, prefix, draft_params=None,
+                **ekw):
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=2, max_seq=32, page_size=4,
+                     prefix_cache=prefix, **ekw),
+        SamplingParams(), draft_params=draft_params)
+    for p in prompts:
+        eng.submit(p.copy(), max_new)
+    out = eng.run()
+    alc = eng.kv.allocator
+    assert alc.num_free + alc.num_outstanding == eng.kv.num_pages
+    return eng, out
+
+
+def test_prefix_cache_greedy_bit_identical_plain(tiny):
+    """Greedy outputs must be bit-identical with the prefix cache on vs
+    off — shared pages + COW + tail-only prefill are pure plumbing."""
+    cfg, api, params = tiny
+    # short and long tails fill the first (cold) admission wave; the
+    # aligned 0-tail prompt arrives warm, so its full-prompt hit COWs
+    prompts = _shared_prompts(cfg.vocab, 8, [3, 9, 0], seed=4) \
+        + _prompts(cfg.vocab, (6,), seed=5)
+    _, off = _run_engine(cfg, params, prompts, 6, prefix=False)
+    eng, on = _run_engine(cfg, params, prompts, 6, prefix=True)
+    for a, b in zip(off["results"], on["results"]):
+        assert a["rid"] == b["rid"]
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    reg = eng.tel.registry
+    assert reg.counter("prefix.hits").value > 0
+    assert reg.counter("prefix.cow_copies").value > 0
+
+
+@pytest.mark.parametrize("mode", ["chain", "tree"])
+def test_prefix_cache_greedy_bit_identical_spec(tiny, mode):
+    """The on/off pin across both speculative regimes: the tail prefill
+    feeds the same decode-path K/V the verify staircase writes, so
+    acceptance decisions (and outputs) cannot move."""
+    cfg, api, params = tiny
+    from repro.core.model_compress import compress_draft, draft_layers
+    draft = compress_draft(params, cfg, profile="w4s75")
+    kw = dict(spec_draft_layers=draft_layers(cfg, "w4s75"))
+    if mode == "chain":
+        kw["spec_k"] = 2
+    else:
+        kw["spec_fanout"] = (2, 2)
+    prompts = _shared_prompts(cfg.vocab, 8, [0, 5, 2], seed=6)
+    _, off = _run_engine(cfg, params, prompts, 6, prefix=False,
+                         draft_params=draft, **kw)
+    _, on = _run_engine(cfg, params, prompts, 6, prefix=True,
+                        draft_params=draft, **kw)
+    for a, b in zip(off["results"], on["results"]):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefix_cache_reduces_page_allocs(tiny):
+    """The point of the PR: pages-per-request drops when prompts share a
+    prefix (TTFT drops with it — the bench sweep measures that side)."""
+    cfg, api, params = tiny
+    prompts = _shared_prompts(cfg.vocab, 8, [2, 3, 4, 2], seed=7)
+    eng_off, _ = _run_engine(cfg, params, prompts, 4, prefix=False)
+    eng_on, _ = _run_engine(cfg, params, prompts, 4, prefix=True)
+    allocs_off = eng_off.tel.registry.counter("kv.page_allocs").value
+    allocs_on = eng_on.tel.registry.counter("kv.page_allocs").value
+    assert allocs_on < allocs_off
+    assert eng_on.tel.registry.counter("prefix.hit_tokens").value > 0
+
+
+def test_cached_prefixes_evicted_under_pool_pressure(tiny):
+    """Pool sized for ~one resident request: distinct prompts stream
+    through with the cache on, so admission must EVICT stale cached
+    prefixes (instead of deadlocking on cache-held pages) and the run
+    must drain completely."""
+    cfg, api, params = tiny
+    prompts = _prompts(cfg.vocab, (9, 10, 11, 9), seed=8)
+    eng = InferenceEngine(
+        cfg, params,
+        EngineConfig(num_slots=2, max_seq=16, page_size=4, num_pages=4,
+                     prefix_cache=True),
+        SamplingParams())
+    for p in prompts:
+        eng.submit(p, 4)
+    res = eng.run()
+    assert len(res["results"]) == 4
+    assert all(r["n_generated"] == 4 for r in res["results"])
+    reg = eng.tel.registry
+    assert reg.counter("prefix.evicted_pages").value > 0
+    alc = eng.kv.allocator
+    assert alc.num_free + alc.num_outstanding == eng.kv.num_pages
+    assert alc.num_outstanding == eng.kv.prefix.cached_pages
+
+
+class _PollSource(ArrivalSource):
+    """Poll-count-scheduled arrivals (same trick as the resilience
+    suite): request i lands at the engine's N-th poll of the source, so
+    a high-priority arrival can be injected once the low-priority pair
+    is already decoding — forcing a preemption deterministically."""
+
+    def __init__(self, schedule):
+        self._sched = sorted(schedule, key=lambda s: s[0])
+        self._polls = 0
+        self._i = 0
+
+    def due(self, now_s):
+        self._polls += 1
+        out = []
+        while (self._i < len(self._sched)
+               and self._sched[self._i][0] <= self._polls):
+            _, prompt, max_new, prio = self._sched[self._i]
+            out.append(GeneratedRequest(
+                idx=self._i, arrival_s=None, think_s=None,
+                prompt=prompt, max_new=max_new, priority=prio))
+            self._i += 1
+        return out
+
+    def next_at(self):
+        return None
+
+    @property
+    def exhausted(self):
+        return self._i >= len(self._sched)
+
+
+def test_prefix_cache_with_preemption_lossless(tiny):
+    """Preempt-and-recompute under the prefix cache: the victim's decref
+    leaves shared pages alive for their other references, and its folded
+    re-admission re-matches the cached prefix — greedy outputs still
+    bit-identical to the cache-off run."""
+    cfg, api, params = tiny
+    shared = _shared_prompts(cfg.vocab, 6, [0, 1], seed=9)
+    big = np.arange(10, dtype=np.int32)
+    # the low-pri shared pair fills the 9-page pool first (6 + 3 pages);
+    # the prio-1 request arrives at poll 2 (decoding underway) and its 7
+    # pages can only be served by preempting a low-priority victim
+    sched = [(1, shared[0], 16, 0), (1, shared[1], 4, 0), (2, big, 16, 1)]
+
+    def run(prefix):
+        eng = InferenceEngine(
+            cfg, params,
+            EngineConfig(num_slots=2, max_seq=32, page_size=4,
+                         num_pages=9, prefix_cache=prefix),
+            SamplingParams())
+        out = eng.run(source=_PollSource(sched))
+        return eng, out
+
+    eng_off, off = run(False)
+    eng_on, on = run(True)
+    assert eng_off.metrics.summary()["preemptions"] > 0
+    assert eng_on.metrics.summary()["preemptions"] > 0
+    off_by = {r["rid"]: r["tokens"] for r in off["results"]}
+    assert len(on["results"]) == len(off_by) == 3
+    for r in on["results"]:
+        np.testing.assert_array_equal(r["tokens"], off_by[r["rid"]])
+
+
+# ---------------------------------------------------------------------------
+# conservation storm
+# ---------------------------------------------------------------------------
+
+def test_refcount_conservation_storm(tiny):
+    """Randomized admit/insert/release/evict churn under prefix-share
+    traffic: ``num_free + num_outstanding == num_pages`` after EVERY
+    operation, zero leaked pages at drain, refcounts all 0 or cache-held."""
+    cfg, api, _ = tiny
+    rng = np.random.default_rng(0)
+    kv = PagedKVCache(cfg, api, num_slots=4, max_seq=32, page_size=4,
+                      num_pages=24, prefix_cache=True)
+    pool = _shared_prompts(cfg.vocab, 8, [0, 2, 5, 7], seed=10) \
+        + _prompts(cfg.vocab, (6, 9), seed=11)
+    live = {}
+    for step in range(300):
+        op = rng.random()
+        free_slots = [s for s in range(4) if s not in live]
+        if op < 0.5 and free_slots:
+            slot = int(rng.choice(free_slots))
+            prompt = pool[int(rng.integers(len(pool)))]
+            n = len(prompt) + int(rng.integers(1, 8))
+            if kv.can_admit(n, prompt=prompt):
+                kv.assign(slot, n, prompt=prompt)
+                kv.prefix_insert(slot, prompt)
+                live[slot] = prompt
+        elif op < 0.85 and live:
+            slot = int(rng.choice(list(live)))
+            kv.release(slot)                      # finish OR preempt: same
+            del live[slot]                        # decref path either way
+        elif kv.prefix.cached_pages:
+            kv.prefix.evict_for(int(rng.integers(1, 3)))
+        alc = kv.allocator
+        assert alc.num_free + alc.num_outstanding == kv.num_pages, step
+    for slot in list(live):
+        kv.release(slot)
+    alc = kv.allocator
+    assert alc.num_free + alc.num_outstanding == kv.num_pages
+    # every outstanding page is cache-held (refcount exactly 1)...
+    assert alc.num_outstanding == kv.prefix.cached_pages
+    assert alc.num_shared == 0
+    # ...and flushing the cache returns the pool to fully free: zero leaks
+    kv.prefix.flush()
+    assert alc.num_free == kv.num_pages
+    assert all(alc.refcount(p) == 0 for p in range(kv.num_pages))
