@@ -59,6 +59,19 @@ summary:
     PYTHONPATH=src python -m repro.launch.serve --prefix-cache \
         --page-size 4 --workload 'process=poisson,rate=50,requests=16,\
 prompt=24:24,prefix_share=0.8,prefix_pool=4,prefix_len=20'
+
+Chunked prefill (DESIGN.md §14): ``--chunked-prefill N`` splits each
+admitted prompt into N-token chunks fed one per scheduling boundary,
+interleaved into one-step decode segments — a monolithic admission no
+longer stalls co-resident decodes for the whole prompt's prefill in
+one inter-token gap. Pure scheduling: greedy outputs (and the printed
+``[digest]``) are bit-identical to a monolithic run in every mode,
+and ``--slo stall=MS`` gates the worst single stall a request saw
+(needs ``--trace``):
+
+    PYTHONPATH=src python -m repro.launch.serve --chunked-prefill 8 \
+        --trace /tmp/trace.json --slo stall=50 \
+        --workload 'process=poisson,rate=20,requests=16,prompt=24:64'
 """
 import argparse
 

@@ -8,7 +8,7 @@ on top of the GQSA-compressed model zoo::
     eng.submit(prompt_tokens, max_new_tokens=32)
     results = eng.run()
 """
-from repro.engine.engine import EngineConfig, InferenceEngine
+from repro.engine.engine import EngineConfig, InferenceEngine, plan_chunks
 from repro.engine.kv_cache import PageAllocator, PagedKVCache
 from repro.engine.loadgen import (SLO, SLOLedger, Workload, WorkloadSpec,
                                   generate, make_source)
@@ -27,4 +27,5 @@ __all__ = ["EngineConfig", "InferenceEngine", "PageAllocator",
            "MetricsRegistry", "SpanTracer", "StreamingHistogram",
            "WorkloadSpec", "Workload", "generate", "make_source", "SLO",
            "SLOLedger", "ResilienceConfig", "ChaosConfig",
-           "RejectedRequest", "OversizedRequest", "PrefixCache"]
+           "RejectedRequest", "OversizedRequest", "PrefixCache",
+           "plan_chunks"]

@@ -20,13 +20,26 @@ per slot. Budgets are clamped on device, so segments stay sync-free.
 top-k branches per draft depth, one T = N+1 tree-attention verify, and
 an accepted-path KV compaction — optionally retuned online per segment
 from the observed acceptance rate (``spec_adaptive``).
+
+With ``prefill_chunk_tokens > 0`` prefill stops being atomic
+(Sarathi-style chunked prefill, DESIGN.md §14): an admitted prompt
+whose unshared tail exceeds the budget enters a ``PREFILLING`` state
+and feeds one token-budget chunk per scheduling boundary through the
+ragged ``tail_fn`` path — a chunk is just a tail whose shared boundary
+is the previous chunk's end — while the other slots keep decoding
+(segments clamp to one step so chunks interleave at token granularity).
+The decode loop itself runs *two-deep*: each segment's boundary sync
+waits on the PREVIOUS segment's tokens (a trailing copy), so the host
+schedules segment N+1 while N still executes and issues strictly fewer
+``block_until_ready`` calls than segments dispatched.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +52,7 @@ from repro.engine.resilience import (ChaosDeviceError, PRESSURE_CRITICAL,
                                      choose_victims, make_injector,
                                      pressure_level)
 from repro.engine.sampling import SamplingParams, sample
-from repro.engine.scheduler import DECODE, Request, Scheduler
+from repro.engine.scheduler import DECODE, PREFILLING, Request, Scheduler
 from repro.engine.telemetry import Telemetry
 from repro.models.registry import get_model
 
@@ -80,6 +93,13 @@ class EngineConfig:
     # acceptance rate: thrash shrinks to a chain K=1, sustained
     # acceptance widens back to the full spec_fanout profile
     spec_adaptive: bool = False
+    # chunked prefill (DESIGN.md §14): split each admitted prompt into
+    # chunks of at most this many tokens and interleave them into the
+    # decode loop (one chunk per scheduling boundary) instead of one
+    # monolithic admission prefill — bounds the TPOT jitter prefills
+    # inject into co-resident decodes. 0 = monolithic (the historical
+    # behaviour); greedy outputs are bit-identical on/off (pinned).
+    prefill_chunk_tokens: int = 0
 
 
 def _bucket(n: int, lo: int) -> int:
@@ -87,6 +107,25 @@ def _bucket(n: int, lo: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def plan_chunks(start: int, prompt_len: int,
+                budget: int) -> List[Tuple[int, int]]:
+    """Chunk planner (DESIGN.md §14): split prompt positions
+    [start, prompt_len) into ``(chunk_start, chunk_len)`` pieces of at
+    most ``budget`` tokens, covering every position exactly once. The
+    last chunk always ends exactly at ``prompt_len`` — its sampled
+    token is the request's first output token, so the final chunk is
+    never empty. ``budget <= 0`` means monolithic: one chunk."""
+    if budget <= 0:
+        return [(start, prompt_len - start)]
+    out = []
+    p = start
+    while p < prompt_len:
+        n = min(budget, prompt_len - p)
+        out.append((p, n))
+        p += n
+    return out
 
 
 @functools.lru_cache(maxsize=32)
@@ -209,6 +248,13 @@ class InferenceEngine:
         self._c_ladder_flips = reg.counter("spec.ladder_transitions")
         self._g_ladder = reg.gauge("spec.ladder_rung")
         self._c_degraded = reg.counter("resil.degraded_segments")
+        # chunked prefill (DESIGN.md §14): chunk dispatches + requests
+        # preempted while still mid-prefill (their fold is empty — the
+        # re-prefill restarts the chunk ladder from the fold point)
+        self._c_chunks = reg.counter("engine.prefill_chunks")
+        self._c_chunk_tokens = reg.counter("engine.prefill_chunk_tokens")
+        self._c_midprefill_preempt = reg.counter(
+            "resil.midprefill_preemptions")
         self._ladder_rung: Optional[int] = None
         self.rcfg = engine_cfg.resilience if engine_cfg.resilience \
             is not None else ResilienceConfig()
@@ -231,6 +277,12 @@ class InferenceEngine:
         self._block_tables = self.kv.device_block_tables()
         self._max_live = self.kv.max_pages_per_slot    # static, pow2-bucketed
         self._source = None              # timed-admission stream, run() only
+        # two-deep dispatch (DESIGN.md §14): token arrays of decode
+        # segments dispatched but not yet synced. Each boundary retires
+        # the PREVIOUS segment (trailing copy) and leaves the one just
+        # dispatched in flight — at most one entry deep, so the host is
+        # always scheduling segment N+1 while N executes.
+        self._inflight: Deque[jnp.ndarray] = deque()
         self._token_log: List[jnp.ndarray] = []        # [B] arrays, lazy
         # spec mode log: (tokens [B, W], counts [B]) per prefill/round
         self._spec_log: List = []
@@ -319,6 +371,13 @@ class InferenceEngine:
                            queue_depth=len(sch.waiting))
                 if admitted:
                     self._do_prefill(admitted)
+                # chunked prefill (DESIGN.md §14): every PREFILLING slot
+                # advances one prompt chunk per boundary; the final
+                # chunk's sample is the first token and flips the slot
+                # to DECODE in time for this boundary's segment
+                self._feed_prefill_chunks()
+                prefilling = any(r.state == PREFILLING
+                                 for r in sch.active())
                 actives = [r for r in sch.active() if r.state == DECODE]
                 if not actives:
                     if sch.waiting and not sch.active():
@@ -344,10 +403,15 @@ class InferenceEngine:
                     pre_prod = {r.rid: r.produced for r in actives}
                 else:
                     pre_prod = None
-                if self.spec:
+                # spec ladder interplay (DESIGN.md §14): no draft/verify
+                # while any slot is mid-chunk — a plain one-step segment
+                # keeps the chunk cadence token-granular, and plain
+                # decode is the (lossless) floor of the degrade ladder
+                if self.spec and not prefilling:
                     finished = self._spec_segment(actives)
                 else:
-                    finished = self._decode_segment(actives)
+                    finished = self._decode_segment(
+                        actives, max_steps=1 if prefilling else None)
                 if pre_prod is not None:
                     finished = self._inject_nan(actives, finished,
                                                 pre_prod)
@@ -422,7 +486,12 @@ class InferenceEngine:
         if not slot_free or self.kv.can_admit(head.total_tokens, la_eff,
                                               prompt=head.prompt):
             return 0
-        running = [r for r in sch.active() if r.state == DECODE]
+        # mid-prefill slots are preemptible too (DESIGN.md §14): a
+        # PREFILLING victim has the least sunk work per freed page (its
+        # fold is empty — produced == folded — so recompute restarts
+        # the chunk ladder from the fold point, losslessly)
+        running = [r for r in sch.active()
+                   if r.state in (DECODE, PREFILLING)]
         victims = choose_victims(head, running, self.kv, la_eff,
                                  self.rcfg.max_preemptions)
         for v in victims:
@@ -471,6 +540,8 @@ class InferenceEngine:
         decode would have (the engine-vs-naive-forward parity test pins
         this), so the re-prefill resumes the request losslessly —
         bit-identical greedy outputs, pinned by test."""
+        if r.state == PREFILLING:
+            self._c_midprefill_preempt.inc()
         r.prompt = np.concatenate([r.prompt, self._request_tokens(r)]) \
             .astype(np.int32)
         r.folded = r.produced
@@ -535,16 +606,33 @@ class InferenceEngine:
                     time.sleep(chaos.cfg.device_backoff_s
                                * (2 ** (attempt - 1)))
 
-    def _decode_segment(self, actives: List[Request]) -> List[Request]:
+    def _decode_segment(self, actives: List[Request],
+                        max_steps: Optional[int] = None) -> List[Request]:
         """Plain decode segment: no slot can exceed its budget before the
         earliest one finishes, so no host sync inside the segment. Also
         the floor of the spec degrade ladder — when a spec engine runs it
         (some slot's reservation has no lookahead), tokens log into the
-        spec log (width 1) so materialization stays uniform."""
+        spec log (width 1) so materialization stays uniform.
+
+        ``max_steps`` clamps the segment (chunked prefill runs one-step
+        segments so prompt chunks interleave at token granularity).
+
+        Two-deep dispatch (DESIGN.md §14): the boundary does NOT wait
+        for this segment's tokens — it retires the *previous* segment's
+        final array (a trailing copy, typically already complete since
+        this segment's dispatches queued behind it) and leaves this one
+        in flight. Host accounting needs no token values (budgets are
+        host-side counters; values are only read at materialization or
+        a preemption fold, both of which sync implicitly), so the host
+        is always one segment ahead of the device — and issues strictly
+        fewer ``block_until_ready`` calls than segments dispatched,
+        pinned by the telemetry sync-count test."""
         sch = self.scheduler
         tracer = self.tel.tracer
         t0 = self.metrics.now()
         seg = max(1, min(r.remaining for r in actives))
+        if max_steps is not None:
+            seg = min(seg, max_steps)
         finished: List[Request] = []
         with tracer.span("decode_segment") as seg_sp:
             with tracer.annotate("decode_segment"):
@@ -562,10 +650,14 @@ class InferenceEngine:
                         idx = len(self._token_log)
                         self._token_log.append(self._tokens)
                     for r in sch.active():
-                        r.log_entries.append(idx)
+                        if r.state == DECODE:
+                            r.log_entries.append(idx)
                     finished.extend(sch.step_decoded())
-            with tracer.span("sync", cat="sync"):
-                jax.block_until_ready(self._tokens)    # segment boundary
+            self._inflight.append(self._tokens)
+            if len(self._inflight) > 1:
+                with tracer.span("sync", cat="sync"):
+                    while len(self._inflight) > 1:
+                        jax.block_until_ready(self._inflight.popleft())
             seg_sp.set(steps=seg, slots=len(actives),
                        tokens=seg * len(actives))
             if tracer.enabled:
@@ -651,9 +743,15 @@ class InferenceEngine:
                 idx = self._log_spec(out, n_new)
                 round_idxs.append(idx)
                 for r in sch.active():
-                    r.log_entries.append(idx)
+                    if r.state == DECODE:
+                        r.log_entries.append(idx)
             with tracer.span("sync", cat="sync"):
                 jax.block_until_ready(self._tokens)    # segment boundary
+            # the round replay below reads n_new on the host, so spec
+            # segments sync at their own boundary — anything a plain
+            # segment left in flight is older than this sync (one
+            # device stream) and retires with it
+            self._inflight.clear()
             seg_tokens = 0
             for idx in round_idxs:                     # replay the rounds
                 n_new_h = np.asarray(self._spec_log[idx][1])
@@ -727,6 +825,30 @@ class InferenceEngine:
     def _do_prefill(self, admitted: List[Request]) -> None:
         b = self.ecfg.num_slots
         tracer = self.tel.tracer
+        # chunked prefill (DESIGN.md §14): an admitted prompt whose
+        # unshared tail exceeds the chunk budget does NOT prefill here —
+        # it enters PREFILLING and feeds one chunk per scheduling
+        # boundary (_feed_prefill_chunks), interleaved with the other
+        # slots' decode steps. Tails that fit one chunk keep the
+        # monolithic paths below (their cost is bounded by the budget,
+        # and the batched flash prefill keeps its MFU).
+        budget = self.ecfg.prefill_chunk_tokens
+        if budget > 0:
+            rest = []
+            for r in admitted:
+                sh = self.kv.slot_shared_tokens(r.slot)
+                if len(plan_chunks(sh, r.prompt_len, budget)) > 1:
+                    r.state = PREFILLING
+                    r.prefill_pos = sh
+                    self.metrics.record_admit(r.rid)
+                else:
+                    rest.append(r)
+            admitted = rest
+            if not admitted:
+                # PREFILLING slots changed the admission picture (their
+                # device rows must mask out of decode dispatches)
+                self._sync_slot_state()
+                return
         # prefix-cache split (DESIGN.md §13): slots whose prompt prefix
         # was mapped to cached pages at admission prefill only the
         # unshared tail (a ragged multi-token decode block against the
@@ -861,6 +983,111 @@ class InferenceEngine:
                                     self._positions)
         self._sync_slot_state()
 
+    def _feed_prefill_chunks(self) -> None:
+        """Advance every PREFILLING slot by one prompt chunk (DESIGN.md
+        §14). A chunk is a ragged ``tail_fn`` feed whose start is the
+        previous chunk's end — exactly the prefix-cache tail-prefill
+        dispatch, so the kernels need no new mode and a prefix-shared
+        prompt's first chunk simply starts at its shared boundary. All
+        mid-chunk slots ride ONE dispatch; intermediate chunks discard
+        the sampled token (it is not the first token — only the final
+        chunk, which ends exactly at the prompt length, samples from
+        the last real position and flips the request to DECODE via the
+        same completion protocol as monolithic prefill). Intermediate
+        chunks add no host sync: the dispatch queues behind the decode
+        pipeline and the boundary's trailing sync covers it."""
+        sch = self.scheduler
+        chunking = [r for r in sch.active() if r.state == PREFILLING]
+        if not chunking:
+            return
+        budget = self.ecfg.prefill_chunk_tokens
+        b = self.ecfg.num_slots
+        tracer = self.tel.tracer
+        lens = {r.rid: plan_chunks(r.prefill_pos, r.prompt_len,
+                                   budget)[0][1] for r in chunking}
+        t_pad = min(_bucket(max(lens.values()),
+                            self.ecfg.prompt_bucket_min),
+                    self.ecfg.max_seq)
+        toks = np.zeros((b, t_pad), np.int32)
+        starts = np.zeros((b,), np.int32)
+        feed = np.zeros((b,), np.int32)
+        bt = np.full_like(self.kv.block_tables, self.kv.sentinel)
+        finals: List[Request] = []
+        for r in chunking:
+            n = lens[r.rid]
+            toks[r.slot, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
+            starts[r.slot] = r.prefill_pos
+            feed[r.slot] = n
+            # chunk-granular page exposure: only pages covering tokens
+            # this chunk can touch (prefix + fed-so-far + the chunk)
+            bt[r.slot] = self.kv.slot_block_table(r.slot,
+                                                  r.prefill_pos + n)
+            r.prefill_pos += n
+            if r.prefill_pos >= r.prompt_len:
+                finals.append(r)
+        occ = int((bt != self.kv.sentinel).sum(1).max())
+        max_live = min(_bucket(max(occ, 1), 1),
+                       self.kv.max_pages_per_slot)
+        with tracer.span("prefill_chunk") as sp, \
+                tracer.annotate("prefill_chunk"):
+            first_t, self.kv.data, self._rng = self._dispatch(
+                self._tail_fn,
+                self.params, self.kv.data, jnp.asarray(toks),
+                jnp.asarray(starts), jnp.asarray(feed),
+                jnp.asarray(bt), self._rng, max_live)
+            if finals:
+                # completed prefills take their TTFT timestamp here, so
+                # the first token must actually exist (same convention
+                # as the monolithic prefill block)
+                jax.block_until_ready(first_t)
+            sp.set(slots=len(chunking), bucket=t_pad,
+                   chunk_tokens=int(feed.sum()), completed=len(finals))
+            if tracer.enabled:
+                for r in chunking:
+                    tracer.flow_point(r.rid, "prefill_chunk", t=sp.t0)
+        self._c_chunks.inc(len(chunking))
+        self._c_chunk_tokens.inc(int(feed.sum()))
+        if not finals:
+            return
+        fmask = np.zeros((b,), bool)
+        lengths = np.zeros((b,), np.int32)
+        for r in finals:
+            fmask[r.slot] = True
+            lengths[r.slot] = r.prompt_len
+        if self.spec:
+            idx = self._log_spec(first_t[:, None],
+                                 jnp.asarray(fmask.astype(np.int32)))
+        else:
+            idx = len(self._token_log)
+            self._token_log.append(first_t)
+        # prefix-insert timing audit (DESIGN.md §14): under chunking a
+        # prompt's full-page blocks are only all written at its LAST
+        # chunk — inserting earlier would cache pages whose K/V another
+        # request could map before this slot writes them
+        if self.kv.prefix is not None:
+            for r in finals:
+                self.kv.prefix_insert(r.slot, r.prompt)
+        t = self.metrics.now()
+        done_now = []
+        for r in finals:
+            r.state = DECODE
+            r.produced += 1
+            r.log_entries = [idx]
+            self.metrics.record_first_token(r.rid, t)
+            if r.produced >= r.max_new_tokens:   # budget exhausted already
+                self.metrics.record_finish(r.rid, t, r.produced)
+                done_now.append(r)
+        for r in done_now:
+            self.scheduler.finish(r)
+            if self._source is not None:
+                self._source.on_finish(t - self.metrics.start_t)
+        self._tokens = jnp.where(jnp.asarray(fmask), first_t,
+                                 self._tokens)
+        self._positions = jnp.where(jnp.asarray(fmask),
+                                    jnp.asarray(lengths),
+                                    self._positions)
+        self._sync_slot_state()
+
     def _log_spec(self, toks: jnp.ndarray, counts: jnp.ndarray) -> int:
         """Append a (tokens [B, W], counts [B]) pair to the spec log,
         width-padded to the max round width (chain K+1 / tree depth+1)
@@ -873,8 +1100,26 @@ class InferenceEngine:
 
     def _sync_slot_state(self) -> None:
         """Refresh device copies of the block tables + active mask +
-        per-slot budgets after a scheduling event (admission/eviction)."""
-        self._block_tables = self.kv.device_block_tables()
+        per-slot budgets after a scheduling event (admission/eviction).
+
+        PREFILLING slots (mid-chunk, DESIGN.md §14) get all-sentinel
+        rows in the DECODE-side block tables: a decode/draft/verify
+        dispatch samples every row, and without the mask its K/V
+        scatter at the slot's stale position would corrupt the pages
+        the chunk feeds are writing. Chunk dispatches build their own
+        tables from the real ``kv.block_tables``."""
+        # the copy is load-bearing under two-deep dispatch: jnp.asarray
+        # of a host numpy array may be ZERO-COPY on CPU, and
+        # kv.block_tables is mutated in place by assign/release — an
+        # aliased device view would change under still-in-flight steps
+        # (the old loop's per-boundary block_until_ready hid this)
+        bts = self.kv.block_tables.copy()
+        mid = [i for i, s in enumerate(self.scheduler.slots)
+               if s.request is not None
+               and s.request.state == PREFILLING]
+        if mid:
+            bts[mid, :] = self.kv.sentinel
+        self._block_tables = jnp.asarray(bts)
         # static clamp for the decode-side page gather / kernel grid: the
         # batch's max occupied page count, pow2-bucketed so the jitted
         # steps retrace at most log2(max_pages_per_slot) times

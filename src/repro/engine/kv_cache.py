@@ -369,6 +369,21 @@ class PagedKVCache:
         return sum(1 for p in self._slot_pages[slot]
                    if self.allocator.refcount(p) == 1)
 
+    def slot_block_table(self, slot: int,
+                         n_tokens: Optional[int] = None) -> np.ndarray:
+        """One slot's block-table row, optionally clamped to the pages
+        covering positions [0, n_tokens) — entries past that carry the
+        sentinel. Chunked prefill (DESIGN.md §14) dispatches each chunk
+        against only the pages it can touch (prefix + tokens fed so
+        far + the chunk itself), so the per-chunk page gather and the
+        ``max_live`` clamp scale with fed tokens, not with the slot's
+        full admission-time reservation."""
+        row = self.block_tables[slot].copy()
+        if n_tokens is not None:
+            keep = -(-int(n_tokens) // self.page_size)
+            row[keep:] = self.sentinel
+        return row
+
     def slot_lookahead(self, slot: int) -> int:
         """The speculative lookahead this slot's reservation covers —
         the segment spec ladder may not exceed the minimum over its

@@ -27,16 +27,24 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-DEADLINES = ("ttft", "tpot", "e2e")
+DEADLINES = ("ttft", "tpot", "stall", "e2e")
 
 
 @dataclasses.dataclass(frozen=True)
 class SLO:
     """Deadlines in milliseconds; ``None`` leaves a dimension ungated.
     ``tpot_ms`` gates the request's MEAN time per output token after the
-    first (the same statistic the metrics summary reports)."""
+    first (the same statistic the metrics summary reports).
+    ``stall_ms`` gates the LONGEST single prefill span overlapping the
+    request's decode window — the inter-token-tail companion of the
+    mean gate. A monolithic admission prefill stalls co-resident
+    decodes for its full duration in one gap, which a mean over the
+    whole window flattens away; chunked prefill (DESIGN.md §14) exists
+    to bound exactly this statistic. Needs a trace (span durations are
+    the measurement); without one the dimension never fires."""
     ttft_ms: Optional[float] = None
     tpot_ms: Optional[float] = None
+    stall_ms: Optional[float] = None
     e2e_ms: Optional[float] = None
 
     @classmethod
@@ -74,6 +82,7 @@ class Verdict:
     queue_wait_ms: float
     prefill_ms: float
     decode_ms: float
+    stall_ms: float = float("nan")       # nan without a trace
     met: bool = True
     # deadline -> attributed phase, e.g. {"ttft": "queue_wait"}
     misses: Dict[str, str] = dataclasses.field(default_factory=dict)
@@ -84,16 +93,41 @@ class Verdict:
     shed_reason: str = ""
 
 
-def _overlap_ms(events, name: str, lo_us: float, hi_us: float) -> float:
-    """Total duration (ms) of complete spans called ``name`` overlapping
-    the [lo_us, hi_us] window of the trace clock."""
+def _overlap_ms(events, names, lo_us: float, hi_us: float) -> float:
+    """Total duration (ms) of complete spans with a name in ``names``
+    (one name or a tuple) overlapping the [lo_us, hi_us] window of the
+    trace clock."""
+    if isinstance(names, str):
+        names = (names,)
     total = 0.0
     for ev in events:
-        if ev.get("ph") != "X" or ev.get("name") != name:
+        if ev.get("ph") != "X" or ev.get("name") not in names:
             continue
         a, b = ev["ts"], ev["ts"] + ev["dur"]
         total += max(0.0, min(b, hi_us) - max(a, lo_us))
     return total / 1e3
+
+
+def _max_span_ms(events, names, lo_us: float, hi_us: float) -> float:
+    """Longest SINGLE span (ms, full duration) with a name in ``names``
+    overlapping the [lo_us, hi_us] window — the worst one-gap stall a
+    co-resident request saw, as opposed to the summed overlap."""
+    if isinstance(names, str):
+        names = (names,)
+    worst = 0.0
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("name") not in names:
+            continue
+        if ev["ts"] < hi_us and ev["ts"] + ev["dur"] > lo_us:
+            worst = max(worst, ev["dur"])
+    return worst / 1e3
+
+
+# every span shape prompt ingestion takes: monolithic batched prefill,
+# prefix-cache tail-only prefill, and chunked-prefill chunk feeds
+# (DESIGN.md §14) — all of them steal the decode loop's boundary time,
+# so all of them count as prefill interference for TPOT misses
+PREFILL_SPANS = ("prefill", "prefill_tail", "prefill_chunk")
 
 
 class SLOLedger:
@@ -178,12 +212,22 @@ class SLOLedger:
             # cover it, the miss is interference, not decode speed
             overshoot_ms = v.decode_ms - lim * (v.n_tokens - 1)
             interference = _overlap_ms(
-                events, "prefill",
+                events, PREFILL_SPANS,
                 (rt.first_token_t - origin) * 1e6,
                 (rt.finish_t - origin) * 1e6)
             v.misses["tpot"] = ("prefill"
                                 if interference >= overshoot_ms > 0
                                 else "decode_segment")
+        lim = self.slo.limit("stall")
+        if lim is not None and v.n_tokens > 1 and events:
+            # the stalling span IS a prefill span, so a stall miss is
+            # prefill interference by construction
+            v.stall_ms = _max_span_ms(
+                events, PREFILL_SPANS,
+                (rt.first_token_t - origin) * 1e6,
+                (rt.finish_t - origin) * 1e6)
+            if v.stall_ms > lim:
+                v.misses["stall"] = "prefill"
         lim = self.slo.limit("e2e")
         if lim is not None and v.e2e_ms > lim:
             phases = {"queue_wait": v.queue_wait_ms,

@@ -3,10 +3,14 @@
 Request lifecycle::
 
     QUEUED --admit--> PREFILL --first token--> DECODE --budget--> FINISHED
-      ^  ^                                        |
-      |  '------------- preempt (pages freed, ----'
-      |                  tokens folded into prompt)
-      '--- submit                                 QUEUED --deadline--> SHED
+      ^  ^               |                        |
+      |  |               '--> PREFILLING ---------'   (chunked prefill,
+      |  |                     |      ^ chunk          DESIGN.md §14: one
+      |  '---- preempt <-------'------'--feeds---.     prompt chunk per
+      |        (pages freed, tokens               |    boundary; the last
+      |         folded into prompt)               |    chunk's sample is
+      '--- submit                                 '--  the first token)
+                                                  QUEUED --deadline--> SHED
 
 Admission is FIFO within a priority band: the head of the queue is
 admitted as soon as a slot AND its full page reservation (prompt +
@@ -39,8 +43,8 @@ from repro.engine.kv_cache import PagedKVCache
 from repro.engine.resilience import RejectedRequest, TransientAllocFailure
 from repro.engine.telemetry import MetricsRegistry
 
-QUEUED, PREFILL, DECODE, FINISHED, SHED = (
-    "queued", "prefill", "decode", "finished", "shed")
+QUEUED, PREFILL, PREFILLING, DECODE, FINISHED, SHED = (
+    "queued", "prefill", "prefilling", "decode", "finished", "shed")
 
 
 @dataclasses.dataclass
@@ -73,6 +77,11 @@ class Request:
     deadline_t: Optional[float] = None
     preemptions: int = 0
     folded: int = 0
+    # chunked prefill (DESIGN.md §14): prompt tokens already fed into
+    # the KV cache while the request is PREFILLING — the next chunk
+    # starts here. Meaningless outside PREFILLING; reset on preemption
+    # (re-prefill restarts the chunk ladder from the fold point).
+    prefill_pos: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -297,11 +306,13 @@ class Scheduler:
         return [s.request for s in self.slots if not s.free]
 
     def step_decoded(self) -> List[Request]:
-        """Account one decode token for every active slot; returns requests
-        that just hit their budget (still occupying their slot)."""
+        """Account one decode token for every DECODE slot; returns requests
+        that just hit their budget (still occupying their slot).
+        PREFILLING slots (mid-chunk, DESIGN.md §14) sit the step out:
+        their device rows are masked inactive, so no token advanced."""
         done = []
         for s in self.slots:
-            if s.free:
+            if s.free or s.request.state != DECODE:
                 continue
             r = s.request
             r.produced += 1
@@ -326,7 +337,7 @@ class Scheduler:
         boundary)."""
         proposed_t = accepted_t = 0
         for i, s in enumerate(self.slots):
-            if s.free:
+            if s.free or s.request.state != DECODE:
                 continue
             n = int(n_new[i])
             if n <= 0:
@@ -344,9 +355,9 @@ class Scheduler:
     def collect_finished(self) -> List[Request]:
         """Requests that hit their budget (still occupying their slot)."""
         return [s.request for s in self.slots
-                if not s.free and (s.request.produced >=
-                                   s.request.max_new_tokens
-                                   or s.position >= self.max_seq)]
+                if not s.free and s.request.state == DECODE
+                and (s.request.produced >= s.request.max_new_tokens
+                     or s.position >= self.max_seq)]
 
     def finish(self, req: Request) -> None:
         """Evict: free the slot + pages; the loop refills via admit()."""
@@ -372,6 +383,7 @@ class Scheduler:
         req.slot = None
         req.state = QUEUED
         req.preemptions += 1
+        req.prefill_pos = 0          # chunk ladder restarts on re-admit
         req.log_entries = []
         self._enqueue(req)
         self._c_preemptions.inc()

@@ -95,6 +95,12 @@ def main(argv=None):
                          "map cached prefixes to existing pages "
                          "(refcounted, copy-on-write) and prefill only "
                          "the unshared tail — lossless for greedy")
+    ap.add_argument("--chunked-prefill", type=int, default=0, metavar="N",
+                    help="Sarathi-style chunked prefill (DESIGN.md §14): "
+                         "split admitted prompts into N-token chunks fed "
+                         "between decode steps instead of one monolithic "
+                         "prefill — bounds decode-latency interference; "
+                         "greedy output is bit-identical (0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
@@ -139,8 +145,10 @@ def main(argv=None):
                          "--requests/--max-new)")
     ap.add_argument("--slo", default=None, metavar="DEADLINES",
                     help="judge every request against deadlines (ms): "
-                         "'ttft=500,tpot=50,e2e=2000' (any subset); "
-                         "prints attainment + goodput + per-miss phase "
+                         "'ttft=500,tpot=50,e2e=2000' (any subset; also "
+                         "'stall=50' — worst single prefill stall in the "
+                         "decode window, needs --trace); prints "
+                         "attainment + goodput + per-miss phase "
                          "attribution after the run")
     ap.add_argument("--slo-json", default=None, metavar="OUT.json",
                     help="also write the SLO ledger (summary + "
@@ -229,6 +237,7 @@ def main(argv=None):
         EngineConfig(num_slots=args.slots, max_seq=args.max_seq,
                      page_size=args.page_size, num_pages=args.num_pages,
                      prefix_cache=args.prefix_cache,
+                     prefill_chunk_tokens=args.chunked_prefill,
                      use_pallas=args.use_pallas, seed=args.seed,
                      spec_k=args.spec, spec_draft_layers=dlayers,
                      spec_fanout=spec_fanout,

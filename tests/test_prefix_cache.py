@@ -11,9 +11,11 @@ from repro.configs import get_config
 from repro.engine import (EngineConfig, InferenceEngine, OversizedRequest,
                           PageAllocator, PagedKVCache, PrefixCache,
                           RejectedRequest, SamplingParams, Scheduler)
-from repro.engine.loadgen import ArrivalSource, GeneratedRequest
 from repro.engine.telemetry import MetricsRegistry
 from repro.models.registry import get_model
+
+from _engine_utils import ScriptedSource as _PollSource, \
+    make_prompts as _prompts, shared_prompts as _shared_prompts
 
 
 @pytest.fixture(scope="module")
@@ -22,20 +24,6 @@ def tiny():
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     return cfg, api, params
-
-
-def _prompts(vocab, lens, seed=0):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
-
-
-def _shared_prompts(vocab, prefix_len, tail_lens, seed=0):
-    """Prompts sharing one random prefix, with random tails of the given
-    lengths (0 = the bare prefix: the page-aligned COW case)."""
-    rng = np.random.default_rng(seed)
-    pre = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
-    return [np.concatenate([pre, rng.integers(0, vocab, size=n)
-                            .astype(np.int32)]) for n in tail_lens]
 
 
 # ---------------------------------------------------------------------------
@@ -354,37 +342,6 @@ def test_cached_prefixes_evicted_under_pool_pressure(tiny):
     alc = eng.kv.allocator
     assert alc.num_free + alc.num_outstanding == eng.kv.num_pages
     assert alc.num_outstanding == eng.kv.prefix.cached_pages
-
-
-class _PollSource(ArrivalSource):
-    """Poll-count-scheduled arrivals (same trick as the resilience
-    suite): request i lands at the engine's N-th poll of the source, so
-    a high-priority arrival can be injected once the low-priority pair
-    is already decoding — forcing a preemption deterministically."""
-
-    def __init__(self, schedule):
-        self._sched = sorted(schedule, key=lambda s: s[0])
-        self._polls = 0
-        self._i = 0
-
-    def due(self, now_s):
-        self._polls += 1
-        out = []
-        while (self._i < len(self._sched)
-               and self._sched[self._i][0] <= self._polls):
-            _, prompt, max_new, prio = self._sched[self._i]
-            out.append(GeneratedRequest(
-                idx=self._i, arrival_s=None, think_s=None,
-                prompt=prompt, max_new=max_new, priority=prio))
-            self._i += 1
-        return out
-
-    def next_at(self):
-        return None
-
-    @property
-    def exhausted(self):
-        return self._i >= len(self._sched)
 
 
 def test_prefix_cache_with_preemption_lossless(tiny):

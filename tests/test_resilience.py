@@ -18,11 +18,13 @@ from repro.configs import get_config
 from repro.engine import (EngineConfig, InferenceEngine, PageAllocator,
                           PagedKVCache, RejectedRequest, SamplingParams,
                           Scheduler)
-from repro.engine.loadgen import (SLO, ArrivalSource, GeneratedRequest,
-                                  SLOLedger, WorkloadSpec, generate,
+from repro.engine.loadgen import (SLO, SLOLedger, WorkloadSpec, generate,
                                   make_source)
 from repro.engine.resilience import ChaosConfig, ResilienceConfig
 from repro.models.registry import get_model
+
+from _engine_utils import ScriptedSource, by_rid as _by_rid, \
+    make_prompts as _prompts
 
 
 @pytest.fixture(scope="module")
@@ -31,47 +33,6 @@ def tiny():
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     return cfg, api, params
-
-
-def _prompts(vocab, lens, seed=0):
-    rng = np.random.default_rng(seed)
-    return [rng.integers(0, vocab, size=l).astype(np.int32) for l in lens]
-
-
-def _by_rid(res):
-    return {r["rid"]: list(r["tokens"]) for r in res["results"]}
-
-
-class ScriptedSource(ArrivalSource):
-    """Poll-count-scheduled arrivals: request i is delivered at the
-    engine's N-th poll of the source, independent of wall clock — the
-    engine polls once per scheduling boundary, so mid-run arrivals land
-    at deterministic boundaries and preemption tests replay exactly."""
-
-    def __init__(self, schedule):
-        # schedule: [(poll_index, prompt, max_new, priority), ...]
-        self._sched = sorted(schedule, key=lambda s: s[0])
-        self._polls = 0
-        self._i = 0
-
-    def due(self, now_s):
-        self._polls += 1
-        out = []
-        while (self._i < len(self._sched)
-               and self._sched[self._i][0] <= self._polls):
-            _, prompt, max_new, prio = self._sched[self._i]
-            out.append(GeneratedRequest(
-                idx=self._i, arrival_s=None, think_s=None,
-                prompt=prompt, max_new=max_new, priority=prio))
-            self._i += 1
-        return out
-
-    def next_at(self):
-        return None
-
-    @property
-    def exhausted(self):
-        return self._i >= len(self._sched)
 
 
 # ---------------------------------------------------------------------------
